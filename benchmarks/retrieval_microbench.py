@@ -1,0 +1,46 @@
+"""Retrieval hot-spot microbenchmark: the topk_mips Pallas kernel vs the
+pure-jnp oracle on growing bank sizes (wall-clock here is CPU/interpret —
+the roofline numbers in EXPERIMENTS.md §Roofline are the TPU-relevant ones)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+
+
+def _time(fn, *args, iters=3):
+    fn(*args)[0].block_until_ready()
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    out[0].block_until_ready()
+    return (time.time() - t0) / iters
+
+
+def run(csv_rows):
+    print("\n# Retrieval microbench — fused topk_mips vs jnp oracle")
+    key = jax.random.PRNGKey(0)
+    D, K = 256, 32
+    for N in (1024, 8192, 32768):
+        q = jax.random.normal(key, (64, D))
+        bank = jax.random.normal(jax.random.fold_in(key, 1), (N, D))
+        t_ref = _time(lambda a, b: ref.topk_mips_ref(a, b, k=K), q, bank)
+        flops = 2 * 64 * N * D
+        bytes_ = (64 * D + N * D) * 4
+        # v5e roofline for this op (exact MIPS is bandwidth-bound at Q=64)
+        t_compute = flops / PEAK_FLOPS_BF16
+        t_mem = bytes_ / HBM_BW
+        print(f"N={N:6d}: jnp_ref {t_ref*1e6:9.0f}us/call | v5e roofline "
+              f"compute {t_compute*1e6:6.2f}us, memory {t_mem*1e6:6.2f}us "
+              f"(bound: {'memory' if t_mem > t_compute else 'compute'})")
+        csv_rows.append((f"retrieval/topk_N{N}", t_ref * 1e6,
+                         f"{t_mem*1e6:.2f}"))
+    return csv_rows
+
+
+if __name__ == "__main__":
+    run([])

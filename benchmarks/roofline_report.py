@@ -1,0 +1,65 @@
+"""§Roofline report: reads the dry-run artifacts (artifacts/dryrun/*.json)
+and prints the per-(arch × shape) three-term roofline table for the
+single-pod mesh, plus the multi-pod lowering status."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+
+
+def load(out_dir="artifacts/dryrun"):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run(csv_rows, out_dir="artifacts/dryrun"):
+    t0 = time.time()
+    recs = load(out_dir)
+    variants = [r for r in recs
+                if r.get("variant", "baseline") != "baseline"]
+    recs = [r for r in recs if r.get("variant", "baseline") == "baseline"]
+    single = [r for r in recs if r.get("mesh") == "16x16"]
+    multi = [r for r in recs if r.get("mesh") == "2x16x16"]
+    print("\n# Roofline — single-pod (16x16 = 256 chips, TPU v5e terms)")
+    print(f"{'arch':22s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} "
+          f"{'coll_s':>10s} {'dominant':>12s} {'useful':>7s}")
+    for r in single:
+        if r["status"] != "ok" or "roofline" not in r:
+            tag = r.get("skip_reason", r.get("error", ""))[:40]
+            print(f"{r['arch']:22s} {r['shape']:12s} [{r['status']}] {tag}")
+            continue
+        rf = r["roofline"]
+        print(f"{r['arch']:22s} {r['shape']:12s} {rf['compute_s']:10.4f} "
+              f"{rf['memory_s']:10.4f} {rf['collective_s']:10.4f} "
+              f"{rf['dominant']:>12s} {r['useful_flops_ratio']:7.3f}")
+        csv_rows.append((f"roofline/{r['arch']}/{r['shape']}",
+                         rf["bound_s"] * 1e6, rf["dominant"]))
+    ok_m = sum(1 for r in multi if r["status"] == "ok")
+    sk_m = sum(1 for r in multi if r["status"] == "skipped")
+    print(f"\nmulti-pod 2x16x16: {ok_m} lowered+compiled, {sk_m} skipped, "
+          f"{len(multi) - ok_m - sk_m} errors of {len(multi)}")
+
+    if variants:
+        print("\n# §Perf variants (hillclimb — see EXPERIMENTS.md §Perf)")
+        for r in variants:
+            if r["status"] != "ok" or "roofline" not in r:
+                continue
+            rf = r["roofline"]
+            print(f"{r['arch']:22s} {r['shape']:12s} {r['variant']:22s} "
+                  f"c={rf['compute_s']:9.4f} m={rf['memory_s']:9.4f} "
+                  f"x={rf['collective_s']:9.4f} bound={rf['bound_s']:9.4f} "
+                  f"({rf['dominant']})")
+            csv_rows.append((f"perf/{r['arch']}/{r['shape']}/{r['variant']}",
+                             rf["bound_s"] * 1e6, rf["dominant"]))
+    csv_rows.append(("roofline/report", (time.time() - t0) * 1e6,
+                     f"{len(single)}pairs"))
+    return csv_rows
+
+
+if __name__ == "__main__":
+    run([])

@@ -1,0 +1,62 @@
+"""Memory-augmented agent serving: the full Memori stack end-to-end.
+
+    PYTHONPATH=src python examples/agent_serve.py
+
+A small LM is served with continuous batching behind the MemoriClient SDK;
+every chat turn retrieves structured memory, injects it into the prompt, and
+records the exchange back through Advanced Augmentation.  The LM is
+random-init (this box trains ~minutes, not the hours a useful chat model
+needs) — the demo shows the *system*: interception, retrieval, token
+accounting, batched decode.
+"""
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.core import MemoriClient, MemoriMemory, Message
+from repro.core.embedder import HashEmbedder
+from repro.data.tokenizer import HashTokenizer
+from repro.models.model_api import Model
+from repro.serving.engine import Engine
+from repro.serving.sampler import SamplerConfig
+
+
+def main():
+    cfg = get_config("memori-agent").reduced(layers=2, d_model=128)
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    tok = HashTokenizer(cfg.vocab_size)
+    engine = Engine(model, params, max_len=192, slots=2,
+                    sampler=SamplerConfig(temperature=0.9, top_k=50),
+                    tokenizer=tok)
+
+    def llm(prompt: str) -> str:
+        return engine.generate([prompt[-600:]], max_new_tokens=16)[0]
+
+    memory = MemoriMemory(HashEmbedder(), budget=800, use_kernel=False)
+    client = MemoriClient(llm, memory, user_name="Priya")
+
+    turns = [
+        "Hi there! I am Priya.",
+        "I work as a botanist and I live in Tallinn.",
+        "My favorite color is indigo.",
+        "I adopted a hedgehog named Biscuit.",
+    ]
+    for t in turns:
+        reply = client.chat(t, timestamp=time.time())
+        print(f"Priya: {t}\n  agent: {reply[:60]}")
+    client.end_session()
+
+    print("\nmemory after session:", memory.stats())
+    for q in ["What is the name of Priya's hedgehog?",
+              "Which city does Priya live in?"]:
+        ctx = memory.retrieve(q)
+        print(f"\nQ: {q}  ({ctx.token_count} tokens injected)")
+        for t in ctx.triples[:3]:
+            print(f"   {t.render()}")
+        print(f"   engine stats: {engine.stats}")
+
+
+if __name__ == "__main__":
+    main()

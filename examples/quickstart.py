@@ -1,0 +1,59 @@
+"""Quickstart: the Memori persistent memory layer in 60 seconds.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Ingest two chat sessions through Advanced Augmentation, then answer
+questions from the structured memory — and compare the token bill against
+stuffing the full history into the prompt.
+"""
+import time
+
+from repro.core import MemoriMemory, Message
+from repro.core.baselines import FullContextMemory
+from repro.core.embedder import HashEmbedder
+
+
+def main():
+    memory = MemoriMemory(HashEmbedder(), budget=1300, use_kernel=False)
+    full = FullContextMemory()
+
+    t0 = time.time() - 14 * 86400
+    sessions = {
+        "s0": [
+            Message("Ana", "Hey! Long time no see.", t0),
+            Message("Ana", "I work as a data analyst these days.", t0),
+            Message("Ana", "My favorite food is pad thai.", t0),
+            Message("Ana", "I adopted a parrot named Mochi.", t0),
+            Message("Ben", "Nice! I went to Iceland. The glaciers were unreal.", t0),
+        ],
+        "s1": [
+            Message("Ana", "Big news since last time we talked!", t0 + 7 * 86400),
+            Message("Ana", "I used to work as a data analyst, but now I am a chef.",
+                    t0 + 7 * 86400),
+            Message("Ben", "I bought a telescope last week.", t0 + 7 * 86400),
+        ],
+    }
+    for sid, msgs in sessions.items():
+        memory.record_session("demo", sid, msgs)
+        full.record_session("demo", sid, msgs)
+
+    print("memory stats:", memory.stats(), "\n")
+    for q in ["What does Ana work as now?",
+              "What is the name of Ana's parrot?",
+              "Where did Ben travel to?"]:
+        ctx = memory.retrieve(q)
+        print(f"Q: {q}")
+        print(f"  retrieved {len(ctx.triples)} triples, "
+              f"{len(ctx.summaries)} summaries, {ctx.token_count} tokens "
+              f"(full-context would be {full.retrieve(q).token_count})")
+        for t in ctx.triples[:3]:
+            print(f"    {t.render()}")
+        print()
+
+    prompt, ctx = memory.answer_prompt("What does Ana work as now?")
+    print("--- assembled LLM prompt (truncated) ---")
+    print(prompt[:600])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""End-to-end driver: train the ~100M-parameter memori-agent LM for a few
+hundred steps on the synthetic conversation stream, checkpoint it, and sample
+from it.
+
+    PYTHONPATH=src python examples/train_100m.py [--steps 200] [--small]
+
+(--small trains the reduced config: CI-friendly minutes instead of hours on
+this CPU-only container; the full 12L/768d config is the default.)
+"""
+import argparse
+import os
+
+import jax
+
+from repro.checkpoint import io as ckpt
+from repro.configs import get_config
+from repro.data.pipeline import batches
+from repro.data.tokenizer import HashTokenizer
+from repro.models.model_api import Model
+from repro.serving.engine import Engine
+from repro.serving.sampler import SamplerConfig
+from repro.training import optimizer as opt
+from repro.training.train_loop import TrainConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--small", action="store_true")
+    ap.add_argument("--out", default="artifacts/memori_agent.msgpack")
+    args = ap.parse_args()
+
+    cfg = get_config("memori-agent")
+    if args.small:
+        cfg = cfg.reduced(layers=2, d_model=128)
+    model = Model(cfg)
+    print(f"training {cfg.name}: {cfg.param_count()/1e6:.1f}M params")
+
+    params = model.init_params(jax.random.PRNGKey(0))
+    tok = HashTokenizer(cfg.vocab_size)
+    data = batches(args.batch, args.seq, tokenizer=tok)
+    tc = TrainConfig(
+        steps=args.steps, log_every=max(1, args.steps // 20),
+        opt=opt.OptimizerConfig(peak_lr=6e-4, warmup_steps=args.steps // 10,
+                                total_steps=args.steps))
+    params, hist = train(model, params, data, tc,
+                         log_fn=lambda s, m: print(
+                             f"step {s:4d} ce={m['ce']:.3f} "
+                             f"acc={m['accuracy']:.3f} lr={m['lr']:.2e} "
+                             f"({m['wall']:.0f}s)"))
+
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    n = ckpt.save(args.out, params)
+    print(f"checkpoint: {args.out} ({n/1e6:.1f} MB)")
+
+    eng = Engine(model, params, max_len=args.seq, slots=2,
+                 sampler=SamplerConfig(temperature=0.8, top_k=40),
+                 tokenizer=tok)
+    outs = eng.generate(["Caroline: My favorite food is",
+                         "Ben: I went to"], max_new_tokens=12)
+    for o in outs:
+        print("sample:", o)
+
+
+if __name__ == "__main__":
+    main()

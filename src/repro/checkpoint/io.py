@@ -1,0 +1,63 @@
+"""Pytree checkpointing via msgpack (orbax is unavailable offline).
+
+Arrays are stored as (dtype, shape, raw bytes) keyed by tree path; the tree
+structure itself is reconstructed against a reference pytree on load, so
+loading is shape/dtype-validated.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+PyTree = Any
+
+
+def _path_key(path) -> str:
+    out = []
+    for p in path:
+        out.append(str(getattr(p, "key", getattr(p, "idx", p))))
+    return "/".join(out)
+
+
+def save(path: str, tree: PyTree) -> int:
+    """Returns bytes written."""
+    entries = {}
+    def rec(p, leaf):
+        arr = np.asarray(leaf)
+        entries[_path_key(p)] = {
+            "dtype": arr.dtype.str,
+            "shape": list(arr.shape),
+            "data": arr.tobytes(),
+        }
+        return leaf
+    jax.tree_util.tree_map_with_path(rec, tree)
+    blob = msgpack.packb(entries, use_bin_type=True)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "wb") as f:
+        f.write(blob)
+    return len(blob)
+
+
+def load(path: str, like: PyTree) -> PyTree:
+    """Load into the structure of `like` (shape/dtype-checked)."""
+    with open(path, "rb") as f:
+        entries = msgpack.unpackb(f.read(), raw=False)
+
+    def rec(p, leaf):
+        key = _path_key(p)
+        if key not in entries:
+            raise KeyError(f"checkpoint missing {key}")
+        e = entries[key]
+        arr = np.frombuffer(e["data"], dtype=np.dtype(e["dtype"]))
+        arr = arr.reshape(e["shape"])
+        want_shape = tuple(leaf.shape)
+        if tuple(arr.shape) != want_shape:
+            raise ValueError(f"{key}: shape {arr.shape} != {want_shape}")
+        return jnp.asarray(arr).astype(leaf.dtype)
+
+    return jax.tree_util.tree_map_with_path(rec, like)

@@ -1,0 +1,1 @@
+from repro.common import partitioning, utils  # noqa: F401

@@ -1,0 +1,104 @@
+"""Minimal functional module system.
+
+Layers describe their parameters as trees of `ParamSpec` (shape + logical
+axes + init law).  `materialize` turns a spec tree into arrays with
+path-deterministic RNG; `axes_of` extracts the logical-axes tree used by the
+partitioner; `stack` prepends a scanned-layers dimension.  This keeps a single
+source of truth for shape, init and sharding without a framework dependency.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.utils import fold_key
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones | scaled_normal
+    scale: float = 0.02
+    dtype: Optional[Any] = None   # overrides the model param dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def stack(spec_tree: PyTree, n: int) -> PyTree:
+    """Prepend a scanned-layers dim to every spec in the tree."""
+    def _stack(s: ParamSpec) -> ParamSpec:
+        return dataclasses.replace(s, shape=(n, *s.shape), axes=("layers", *s.axes))
+    return jax.tree.map(_stack, spec_tree, is_leaf=is_spec)
+
+
+def _init_leaf(key: jax.Array, spec: ParamSpec, default_dtype) -> jax.Array:
+    dtype = spec.dtype or default_dtype
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "scaled_normal":
+        fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+        std = spec.scale / np.sqrt(max(1, fan_in))
+        return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(dtype)
+    if spec.init == "normal":
+        return (jax.random.normal(key, spec.shape, jnp.float32) * spec.scale).astype(dtype)
+    if spec.init == "rglru_lambda":
+        # RG-LRU Λ init: uniform such that a = sigmoid(Λ) in [0.9, 0.999].
+        u = jax.random.uniform(key, spec.shape, jnp.float32, 0.9, 0.999)
+        return jnp.log(u / (1.0 - u)).astype(dtype)
+    if spec.init == "ssm_alog":
+        # Mamba2 A_log init: A in [1, 16], store log A.
+        u = jax.random.uniform(key, spec.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(dtype)
+    if spec.init == "ssm_dt_bias":
+        # dt bias init so softplus(dt_bias) in [1e-3, 1e-1].
+        u = jax.random.uniform(key, spec.shape, jnp.float32, np.log(1e-3), np.log(1e-1))
+        dt = jnp.exp(u)
+        return (dt + jnp.log(-jnp.expm1(-dt))).astype(dtype)
+    raise ValueError(f"unknown init {spec.init!r}")
+
+
+def materialize(key: jax.Array, spec_tree: PyTree, param_dtype=jnp.float32) -> PyTree:
+    """Spec tree -> array tree, RNG keyed by tree path (order-independent)."""
+    def _leaf(path, spec):
+        k = fold_key(key, *[str(getattr(p, "key", getattr(p, "idx", p))) for p in path])
+        return _init_leaf(k, spec, param_dtype)
+    return jax.tree_util.tree_map_with_path(_leaf, spec_tree, is_leaf=is_spec)
+
+
+def abstract(spec_tree: PyTree, param_dtype=jnp.float32) -> PyTree:
+    """Spec tree -> ShapeDtypeStruct tree (no allocation) for AOT lowering."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype or param_dtype),
+        spec_tree, is_leaf=is_spec,
+    )
+
+
+def axes_of(spec_tree: PyTree) -> PyTree:
+    return jax.tree.map(lambda s: s.axes, spec_tree, is_leaf=is_spec)
+
+
+def spec_tree_to_pspecs(spec_tree: PyTree, rules) -> PyTree:
+    """Spec tree -> PartitionSpec tree via MeshRules (divisibility-guarded)."""
+    return jax.tree.map(
+        lambda s: rules.spec_for(s.axes, s.shape), spec_tree, is_leaf=is_spec
+    )
+
+
+def shardings_of(spec_tree: PyTree, rules) -> PyTree:
+    return jax.tree.map(
+        lambda s: rules.sharding_for(s.axes, s.shape), spec_tree, is_leaf=is_spec
+    )

@@ -1,0 +1,190 @@
+"""Logical-axis partitioning.
+
+Params and activations are annotated with *logical* axis names
+("vocab", "heads", "ff", "experts", "batch", ...).  A `MeshRules` object maps
+logical names to physical mesh axes for a concrete mesh, with divisibility
+guards: a logical axis only shards if its dimension size divides the mesh axis
+size (otherwise it is replicated — e.g. whisper's vocab=51865 on model=16).
+
+This mirrors the MaxText "logical axis rules" design but stays dependency-free.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# Logical axis vocabulary used across the model zoo.
+LOGICAL_AXES = (
+    "layers",      # stacked scanned layers — never sharded
+    "vocab",       # embedding/logits vocab dim
+    "embed",       # d_model dim (FSDP shards this over the data axis)
+    "heads",       # attention query heads
+    "kv_heads",    # attention kv heads
+    "head_dim",
+    "ff",          # mlp hidden
+    "experts",     # moe experts (expert parallel)
+    "expert_cap",  # moe capacity dim
+    "batch",       # global batch
+    "seq",         # sequence dim (context parallel for long_500k)
+    "state",       # ssm / rglru state channels
+    "bank",        # memory-bank rows (retrieval)
+    "topk",
+    None,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRules:
+    """Maps logical axis names -> physical mesh axis (or None)."""
+
+    mesh: Mesh
+    rules: dict  # logical name -> physical axis name | tuple | None
+    # heads that don't divide the model axis fall back to sharding head_dim
+    # (contraction parallelism).  Right for training; WRONG for decode caches:
+    # head_dim-sharded K/V makes XLA all-gather the whole cache every layer
+    # (EXPERIMENTS.md §Perf pair 3) — decode rules disable it and replicate.
+    head_dim_fallback: bool = True
+
+    def axis_size(self, phys) -> int:
+        if phys is None:
+            return 1
+        if isinstance(phys, (tuple, list)):
+            s = 1
+            for a in phys:
+                s *= self.mesh.shape[a]
+            return s
+        return self.mesh.shape[phys]
+
+    def spec_for(self, logical_axes: Sequence[Optional[str]],
+                 dim_sizes: Optional[Sequence[int]] = None) -> P:
+        parts = []
+        fallbacks = []   # (phys, from_index) for indivisible head shardings
+        for i, name in enumerate(logical_axes):
+            phys = self.rules.get(name) if name is not None else None
+            if phys is not None and dim_sizes is not None:
+                size = self.axis_size(phys)
+                if dim_sizes[i] % size != 0:
+                    # replicate instead of uneven shard (pjit arguments must
+                    # shard evenly); heads fall back to head_dim below
+                    if name in ("heads", "kv_heads"):
+                        fallbacks.append(phys)
+                    phys = None
+            parts.append(phys)
+        # Split-within-head fallback: when the head count doesn't divide the
+        # model axis (qwen2.5: 40 heads on model=16; whisper: 12), shard the
+        # head_dim instead — contraction-dim parallelism that SPMD lowers to
+        # partial sums + all-reduce (Megatron-style alternative).
+        if fallbacks and not self.head_dim_fallback:
+            fallbacks = []
+        if fallbacks and dim_sizes is not None:
+            for j, name in enumerate(logical_axes):
+                if name == "head_dim" and parts[j] is None:
+                    phys = fallbacks[0]
+                    if dim_sizes[j] % self.axis_size(phys) == 0:
+                        parts[j] = phys
+                        break
+        # PartitionSpec must not repeat a physical axis; later dims lose.
+        seen: set = set()
+        cleaned = []
+        for phys in parts:
+            flat = phys if isinstance(phys, (tuple, list)) else (phys,)
+            if phys is not None and any(a in seen for a in flat):
+                cleaned.append(None)
+            else:
+                cleaned.append(phys)
+                if phys is not None:
+                    seen.update(flat)
+        return P(*cleaned)
+
+    def sharding_for(self, logical_axes, dim_sizes=None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec_for(logical_axes, dim_sizes))
+
+
+def standard_rules(mesh: Mesh, *, fsdp: bool = False) -> MeshRules:
+    """The production mapping.
+
+    data axis (+ pod, if present) carries batch; model axis carries tensor
+    parallelism (heads / ff / experts / vocab).  With ``fsdp=True`` the
+    ``embed`` axis of params additionally shards over data (ZeRO-3 style; XLA
+    inserts the per-scan-step all-gathers).
+    """
+    axes = mesh.axis_names
+    has_pod = "pod" in axes
+    batch_axes = ("pod", "data") if has_pod else ("data",)
+    rules = {
+        "layers": None,
+        "vocab": "model",
+        "embed": (("pod", "data") if has_pod else "data") if fsdp else None,
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "ff": "model",
+        "experts": "model",
+        # capacity dim shards over the batch axes: each data shard owns its
+        # slice of every expert's buffer (GShard layout) — without this the
+        # (E, C, d) buffers replicate across data and expert FLOPs blow up 16x
+        "expert_cap": ("pod", "data") if has_pod else "data",
+        "batch": batch_axes if len(batch_axes) > 1 else batch_axes[0],
+        "seq": None,
+        "state": "model",
+        "bank": (("pod", "data", "model") if has_pod else ("data", "model")),
+        "topk": None,
+    }
+    return MeshRules(mesh=mesh, rules=rules)
+
+
+def long_context_rules(mesh: Mesh) -> MeshRules:
+    """Rules for decode at batch=1 over a 500k cache: the cache *sequence*
+    shards over the data axis (context parallel); the softmax reduction over
+    the sharded axis lowers to LSE-combining collectives under SPMD."""
+    r = standard_rules(mesh)
+    rules = dict(r.rules)
+    rules["seq"] = "data"
+    rules["batch"] = None
+    return MeshRules(mesh=mesh, rules=rules)
+
+
+# ---------------------------------------------------------------------------
+# Path-pattern -> logical axes assignment for param pytrees.
+# ---------------------------------------------------------------------------
+
+def _path_str(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        else:
+            out.append(str(p))
+    return "/".join(out)
+
+
+def spec_tree_from_axes(axes_tree: PyTree, shapes_tree: PyTree, rules: MeshRules) -> PyTree:
+    """axes_tree mirrors the param tree, with tuples of logical names at the
+    leaves; returns a tree of PartitionSpec."""
+    return jax.tree.map(
+        lambda ax, shp: rules.spec_for(ax, shp.shape),
+        axes_tree,
+        shapes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and (len(x) == 0 or x[0] is None or isinstance(x[0], str)),
+    )
+
+
+def shard_constraint(x, rules: MeshRules, *logical_axes):
+    """with_sharding_constraint by logical names (divisibility-guarded)."""
+    return jax.lax.with_sharding_constraint(
+        x, rules.sharding_for(logical_axes, x.shape)
+    )
+
+
+PATTERN_RULES: list = [
+    # (regex on param path, logical axes per dim) — used by generic matchers.
+    (re.compile(r"embed/table$"), ("vocab", "embed")),
+]

@@ -1,0 +1,81 @@
+"""Small shared helpers: pytree sizes, dtype plumbing, deterministic RNG."""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def tree_num_params(tree: PyTree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_num_bytes(tree: PyTree) -> int:
+    return sum(
+        int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+        for x in jax.tree_util.tree_leaves(tree)
+    )
+
+
+def tree_cast(tree: PyTree, dtype) -> PyTree:
+    return jax.tree.map(lambda x: x.astype(dtype) if hasattr(x, "astype") else x, tree)
+
+
+def human_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB", "PiB"):
+        if abs(n) < 1024.0:
+            return f"{n:.2f} {unit}"
+        n /= 1024.0
+    return f"{n:.2f} EiB"
+
+
+def human_count(n: float) -> str:
+    for unit in ("", "K", "M", "B", "T"):
+        if abs(n) < 1000.0:
+            return f"{n:.2f}{unit}"
+        n /= 1000.0
+    return f"{n:.2f}Q"
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return cdiv(a, b) * b
+
+
+def next_pow2(n: int) -> int:
+    return 1 << max(0, (n - 1)).bit_length()
+
+
+def fold_key(key: jax.Array, *names: str) -> jax.Array:
+    """Derive a named sub-key deterministically from string names."""
+    for name in names:
+        h = int.from_bytes(name.encode("utf-8")[:8].ljust(8, b"\0"), "little")
+        key = jax.random.fold_in(key, h % (2**31 - 1))
+    return key
+
+
+def asdict_shallow(dc) -> dict:
+    return {f.name: getattr(dc, f.name) for f in dataclasses.fields(dc)}
+
+
+def stable_hash(text: str, mod: int) -> int:
+    """Deterministic (cross-run, cross-process) string hash -> [0, mod)."""
+    h = 2166136261
+    for b in text.encode("utf-8"):
+        h = ((h ^ b) * 16777619) & 0xFFFFFFFF
+    return h % mod
+
+
+def log_bucket(x: float, buckets: int = 64) -> int:
+    if x <= 0:
+        return 0
+    return min(buckets - 1, int(math.log2(x + 1)))

@@ -1,0 +1,21 @@
+"""qwen2.5-14b [dense] — 48L d_model=5120 40H (GQA kv=8) d_ff=13824
+vocab=152064.  GQA with QKV bias [hf:Qwen/Qwen2.5-0.5B family]."""
+from repro.models.config import ModelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2.5-14b",
+        arch_type="dense",
+        num_layers=48,
+        d_model=5120,
+        num_heads=40,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=13824,
+        vocab_size=152064,
+        source="[hf:Qwen/Qwen2.5-0.5B]",
+        qkv_bias=True,
+        rope_theta=1_000_000.0,
+        long_context_window=8192,
+    )

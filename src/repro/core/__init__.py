@@ -1,0 +1,9 @@
+# The paper's primary contribution: the Memori persistent memory layer —
+# Advanced Augmentation (triples + summaries), hybrid retrieval over the
+# sharded vector index + hashed BM25, token budgeting, and the SDK wrapper.
+from repro.core.augmentation import AdvancedAugmentation  # noqa: F401
+from repro.core.extraction import LMExtractor, Message, RuleExtractor  # noqa: F401
+from repro.core.memory import ANSWER_PROMPT, MemoriMemory, RetrievedContext  # noqa: F401
+from repro.core.sdk import MemoriClient  # noqa: F401
+from repro.core.summaries import Summary, SummaryStore  # noqa: F401
+from repro.core.triples import Triple, TripleStore  # noqa: F401

@@ -1,0 +1,74 @@
+"""Advanced Augmentation — the paper's memory-creation pipeline (§2.1).
+
+Distills raw dialogue sessions into the dual-layer memory asset:
+semantic triples (precise, token-efficient facts, embedded + BM25-indexed)
+and conversation summaries (narrative context), with triples linked to the
+summary of the session they came from.
+
+Designed as a *background* pipeline: `enqueue` is cheap; `process_pending`
+runs extraction/embedding/indexing in batches (in production this is the
+async worker; the benchmark calls it synchronously).
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+from repro.core.bm25 import BM25Index
+from repro.core.extraction import Extractor, Message, RuleExtractor
+from repro.core.summaries import Summary, SummaryStore
+from repro.core.triples import Triple, TripleStore
+from repro.core.vector_index import VectorIndex
+
+
+class AdvancedAugmentation:
+    def __init__(self, embedder, extractor: Optional[Extractor] = None,
+                 dim: int = 256, use_kernel: bool = True):
+        self.embedder = embedder
+        self.extractor = extractor or RuleExtractor()
+        self.triples = TripleStore()
+        self.summaries = SummaryStore()
+        self.vindex = VectorIndex(dim=dim, use_kernel=use_kernel)
+        self.bm25 = BM25Index()
+        self._pending: List[Tuple[str, str, Sequence[Message]]] = []
+
+    # -- background pipeline surface ------------------------------------
+    def enqueue(self, conversation_id: str, session_id: str,
+                messages: Sequence[Message]) -> None:
+        self._pending.append((conversation_id, session_id, list(messages)))
+
+    def process_pending(self) -> int:
+        n = 0
+        while self._pending:
+            conv, sess, msgs = self._pending.pop(0)
+            self._process(conv, sess, msgs)
+            n += 1
+        return n
+
+    def ingest(self, conversation_id: str, session_id: str,
+               messages: Sequence[Message]) -> Tuple[List[Triple], Summary]:
+        """Synchronous enqueue+process of one session."""
+        return self._process(conversation_id, session_id, messages)
+
+    # -- internals --------------------------------------------------------
+    def _process(self, conv: str, sess: str, msgs: Sequence[Message]):
+        triples, summary = self.extractor.extract(conv, sess, msgs)
+        self.summaries.add(summary)
+        if triples:
+            texts = [t.text() for t in triples]
+            vecs = self.embedder.embed_texts(texts)
+            vids = self.vindex.add(vecs)
+            bids = self.bm25.add(texts)
+            for t, vi, bi in zip(triples, vids, bids):
+                tid = self.triples.add(t)
+                # the three indices stay aligned: tid == vi == bi
+                assert tid == int(vi) == int(bi), (tid, vi, bi)
+        return triples, summary
+
+    # -- stats -------------------------------------------------------------
+    def stats(self) -> dict:
+        return {
+            "triples": len(self.triples),
+            "summaries": len(self.summaries),
+            "bank_rows": self.vindex.n,
+            "pending": len(self._pending),
+        }

@@ -1,0 +1,87 @@
+"""BM25 keyword index, TPU-adapted (DESIGN.md §3).
+
+Classic BM25 walks inverted lists — pointer-chasing the TPU hates.  Here
+terms hash into a fixed id space and documents are fixed-width padded id
+rows, so scoring a query against the whole bank is a dense vectorised
+comparison:  tf(t, d) = sum_j [doc_ids[d, j] == t].  Ranking semantics match
+textbook BM25 up to hash collisions (property-tested against a dict-based
+oracle in tests/).
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.tokenizer import HashTokenizer, default_tokenizer
+
+
+class BM25Index:
+    def __init__(self, k1: float = 1.5, b: float = 0.75, max_doc_len: int = 32,
+                 tokenizer: HashTokenizer | None = None):
+        self.k1 = k1
+        self.b = b
+        self.max_doc_len = max_doc_len
+        self.tokenizer = tokenizer or default_tokenizer()
+        self._doc_rows: List[np.ndarray] = []
+        self._doc_lens: List[int] = []
+        self._df: dict[int, int] = {}
+        self._dirty = True
+        self._docs_arr = None
+        self._lens_arr = None
+
+    def add(self, texts: Sequence[str]) -> List[int]:
+        ids = []
+        for t in texts:
+            tok = self.tokenizer.encode(t)[: self.max_doc_len]
+            row = np.full((self.max_doc_len,), -1, np.int32)
+            row[: len(tok)] = tok
+            self._doc_rows.append(row)
+            self._doc_lens.append(max(1, len(tok)))
+            for term in set(tok):
+                self._df[term] = self._df.get(term, 0) + 1
+            ids.append(len(self._doc_rows) - 1)
+        self._dirty = True
+        return ids
+
+    def __len__(self):
+        return len(self._doc_rows)
+
+    def _arrays(self):
+        if self._dirty:
+            self._docs_arr = jnp.asarray(np.stack(self._doc_rows)) \
+                if self._doc_rows else jnp.zeros((0, self.max_doc_len), jnp.int32)
+            self._lens_arr = jnp.asarray(np.asarray(self._doc_lens, np.float32)) \
+                if self._doc_lens else jnp.zeros((0,), jnp.float32)
+            self._dirty = False
+        return self._docs_arr, self._lens_arr
+
+    def scores(self, query: str) -> jnp.ndarray:
+        """BM25 scores over all docs -> (N,) f32 (empty -> (0,))."""
+        docs, lens = self._arrays()
+        N = docs.shape[0]
+        if N == 0:
+            return jnp.zeros((0,), jnp.float32)
+        terms = list(dict.fromkeys(self.tokenizer.encode(query)))
+        if not terms:
+            return jnp.zeros((N,), jnp.float32)
+        avg_len = float(np.mean(self._doc_lens))
+        out = jnp.zeros((N,), jnp.float32)
+        norm = self.k1 * (1.0 - self.b + self.b * lens / avg_len)
+        for t in terms:
+            df = self._df.get(t, 0)
+            if df == 0:
+                continue
+            idf = float(np.log(1.0 + (N - df + 0.5) / (df + 0.5)))
+            tf = (docs == t).sum(axis=1).astype(jnp.float32)
+            out = out + idf * tf * (self.k1 + 1.0) / (tf + norm)
+        return out
+
+    def topk(self, query: str, k: int):
+        s = self.scores(query)
+        if s.shape[0] == 0:
+            return np.zeros((0,), np.float32), np.zeros((0,), np.int64)
+        k = min(k, s.shape[0])
+        idx = np.argsort(-np.asarray(s), kind="stable")[:k]
+        return np.asarray(s)[idx], idx

@@ -1,0 +1,128 @@
+"""Embedding backends for triple/summary/query text.
+
+* HashEmbedder — deterministic random-projection bag-of-words embedding
+  (per-word Gaussian vectors keyed by the word's stable hash, idf-free mean,
+  L2-normalised).  Zero-training, reproducible across processes: used by the
+  benchmark so Table-1/2 analogues are exactly repeatable.
+* LMEmbedder — the in-framework replacement for the paper's Gemma-300: a
+  small bidirectional transformer (configs/memori_embedder.py), mean-pooled
+  and L2-normalised.  Same interface; used in the end-to-end examples.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.utils import stable_hash
+from repro.data.tokenizer import HashTokenizer, default_tokenizer
+
+
+# Small synonym lexicon: canonicalising through it is what gives the dense
+# path *semantics* that the lexical BM25 path lacks (a stand-in for what a
+# learned embedding model provides) — paraphrased queries match via dense
+# retrieval while exact rare terms (names, objects) match via BM25, which is
+# exactly the complementarity the paper's hybrid search exploits.
+SYNONYMS = {
+    "job": ["work", "works", "working", "profession", "living", "occupation",
+            "career", "trade", "employed"],
+    "food": ["dish", "meal", "cuisine", "eat", "eats", "eating"],
+    "like": ["likes", "love", "loves", "adore", "adores", "enjoy", "enjoys",
+             "favorite", "favourite", "prefer", "prefers", "into"],
+    "city": ["town", "live", "lives", "living", "based", "reside", "resides",
+             "moved"],
+    "buy": ["bought", "buys", "purchase", "purchased", "acquired", "got"],
+    "travel": ["travelled", "traveled", "went", "trip", "visit", "visited",
+               "journey", "vacation"],
+    "learn": ["learning", "learns", "study", "studying", "studies",
+              "practicing", "picking"],
+    "pet": ["animal", "adopt", "adopted", "companion"],
+    "name": ["named", "called", "call"],
+    "color": ["colour", "shade"],
+    "hobby": ["hobbies", "pastime", "interests", "interest"],
+    "when": ["month", "year", "date", "time"],
+}
+_CANON = {w: k for k, ws in SYNONYMS.items() for w in ws}
+
+
+def canonicalize(word: str) -> str:
+    w = word.lower()
+    return _CANON.get(w, w)
+
+
+class HashEmbedder:
+    def __init__(self, dim: int = 256, seed: int = 0,
+                 tokenizer: HashTokenizer | None = None):
+        self.dim = dim
+        self.seed = seed
+        self.tokenizer = tokenizer or default_tokenizer()
+        self._cache: dict[str, np.ndarray] = {}
+
+    def _word_vec(self, word: str) -> np.ndarray:
+        w = canonicalize(word)
+        v = self._cache.get(w)
+        if v is None:
+            rng = np.random.default_rng(stable_hash(w, 2**31) + self.seed)
+            v = rng.standard_normal(self.dim).astype(np.float32)
+            self._cache[w] = v
+        return v
+
+    def embed_texts(self, texts: Sequence[str]) -> jnp.ndarray:
+        out = np.zeros((len(texts), self.dim), np.float32)
+        for i, t in enumerate(texts):
+            words = self.tokenizer.words(t)
+            if not words:
+                continue
+            v = np.mean([self._word_vec(w) for w in words], axis=0)
+            n = np.linalg.norm(v)
+            out[i] = v / n if n > 0 else v
+        return jnp.asarray(out)
+
+    def embed_text(self, text: str) -> jnp.ndarray:
+        return self.embed_texts([text])[0]
+
+
+class LMEmbedder:
+    """Mean-pooled bidirectional transformer encoder."""
+
+    def __init__(self, model, params, out_dim: int = 256,
+                 tokenizer: HashTokenizer | None = None, max_len: int = 64):
+        from repro.models import transformer as _tf  # local import: avoid cycle
+        self.model = model
+        self.cfg = model.cfg
+        self.params = params
+        self.out_dim = out_dim
+        self.max_len = max_len
+        self.tokenizer = tokenizer or HashTokenizer(self.cfg.vocab_size)
+        self._tf = _tf
+
+        def _fwd(params, tokens, mask):
+            from repro.models.layers import embedding as emb
+            x = emb.embed(params["embed"], self.cfg, tokens)
+            B, S = tokens.shape
+            pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+            h, _, _ = self._tf.decoder_apply(
+                params, self.cfg, x, mode="train", positions=pos,
+                mask_kind="bidir", remat=False)
+            m = mask[..., None].astype(h.dtype)
+            pooled = (h * m).sum(1) / jnp.maximum(m.sum(1), 1.0)
+            pooled = pooled[:, : self.out_dim]
+            return pooled / jnp.maximum(
+                jnp.linalg.norm(pooled, axis=-1, keepdims=True), 1e-6)
+
+        self._fwd = jax.jit(_fwd)
+
+    def embed_texts(self, texts: Sequence[str]) -> jnp.ndarray:
+        L = self.max_len
+        toks = np.zeros((len(texts), L), np.int32)
+        mask = np.zeros((len(texts), L), np.float32)
+        for i, t in enumerate(texts):
+            ids = self.tokenizer.encode(t)[:L]
+            toks[i, : len(ids)] = ids
+            mask[i, : len(ids)] = 1.0
+        return self._fwd(self.params, jnp.asarray(toks), jnp.asarray(mask))
+
+    def embed_text(self, text: str) -> jnp.ndarray:
+        return self.embed_texts([text])[0]

@@ -1,0 +1,37 @@
+"""Hybrid retrieval: cosine similarity over triple embeddings + BM25 keyword
+matching (paper §3.3), fused by weighted reciprocal-rank fusion."""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+
+def rrf_fuse(rankings: Sequence[Sequence[int]], weights: Sequence[float] = None,
+             c: float = 60.0) -> List[Tuple[int, float]]:
+    """Weighted reciprocal-rank fusion.  rankings: lists of doc ids, best
+    first.  Returns (doc_id, fused_score) sorted descending."""
+    weights = weights or [1.0] * len(rankings)
+    scores: Dict[int, float] = {}
+    for ranking, w in zip(rankings, weights):
+        for rank, doc in enumerate(ranking):
+            if doc < 0:
+                continue
+            scores[doc] = scores.get(doc, 0.0) + w / (c + rank + 1.0)
+    return sorted(scores.items(), key=lambda kv: (-kv[1], kv[0]))
+
+
+def hybrid_search(query_text: str, query_vec, vindex, bm25, top_k: int = 24,
+                  dense_weight: float = 1.0, sparse_weight: float = 0.7,
+                  pool: int = 64) -> List[Tuple[int, float]]:
+    """Returns [(triple_id, fused_score)] best-first, length <= top_k."""
+    if vindex.n == 0:
+        return []
+    pool = min(pool, vindex.n)
+    _, dense_ids = vindex.search(query_vec, k=pool)
+    dense_rank = [int(i) for i in dense_ids[0] if i >= 0]
+    _, sparse_ids = bm25.topk(query_text, k=pool)
+    sparse_rank = [int(i) for i in sparse_ids]
+    fused = rrf_fuse([dense_rank, sparse_rank],
+                     weights=[dense_weight, sparse_weight])
+    return fused[:top_k]

@@ -1,0 +1,46 @@
+"""Memori SDK — the client wrapper (paper Fig. 1): wraps any LLM callable,
+intercepts chat requests, injects retrieved memory as context, and records
+the exchange back into memory.  LLM-agnostic by construction: `llm_fn` is
+just `prompt -> str` (a repro.serving engine, or anything else)."""
+from __future__ import annotations
+
+import itertools
+import time
+from typing import Callable, Optional
+
+from repro.core.extraction import Message
+from repro.core.memory import ANSWER_PROMPT, MemoriMemory
+
+_session_counter = itertools.count()
+
+
+class MemoriClient:
+    def __init__(self, llm_fn: Callable[[str], str], memory: MemoriMemory,
+                 user_name: str = "user", agent_name: str = "assistant"):
+        self.llm = llm_fn
+        self.memory = memory
+        self.user_name = user_name
+        self.agent_name = agent_name
+        self._turn_buffer: list[Message] = []
+
+    def chat(self, user_text: str, conversation_id: str = "default",
+             timestamp: Optional[float] = None) -> str:
+        ts = timestamp if timestamp is not None else time.time()
+        prompt, ctx = self.memory.answer_prompt(user_text)
+        reply = self.llm(prompt)
+        self._turn_buffer.append(Message(self.user_name, user_text, ts))
+        self._turn_buffer.append(Message(self.agent_name, reply, ts))
+        return reply
+
+    def end_session(self, conversation_id: str = "default",
+                    session_id: Optional[str] = None) -> None:
+        """Flush the buffered turns through Advanced Augmentation."""
+        if not self._turn_buffer:
+            return
+        sid = session_id or f"s{next(_session_counter)}"
+        self.memory.record_session(conversation_id, sid, self._turn_buffer)
+        self._turn_buffer = []
+
+    def context_tokens(self, user_text: str) -> int:
+        """The Table-2 metric: tokens injected for this query."""
+        return self.memory.retrieve(user_text).token_count

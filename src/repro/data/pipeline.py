@@ -1,0 +1,49 @@
+"""LM training data pipeline: synthetic conversational text -> token batches.
+
+Source text is the same generator family as the benchmark (multi-session
+dialogues), giving the 100M-model example a learnable distribution.  The
+pipeline is an infinite, deterministic iterator producing {tokens,
+loss_mask} dicts of shape (batch, seq_len) — with optional stacked
+microbatches for grad accumulation.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Dict, Iterator
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.locomo_synth import generate_conversation
+from repro.data.tokenizer import BOS_ID, EOS_ID, HashTokenizer, default_tokenizer
+
+
+def token_stream(tokenizer: HashTokenizer, seed: int = 0) -> Iterator[int]:
+    for conv_seed in itertools.count(seed * 1000):
+        conv = generate_conversation(seed=conv_seed, n_sessions=4,
+                                     noise_turns=40)
+        for _, msgs in conv.sessions:
+            for m in msgs:
+                yield BOS_ID
+                yield from tokenizer.encode(f"{m.speaker}: {m.text}")
+                yield EOS_ID
+
+
+def batches(batch_size: int, seq_len: int, *, tokenizer=None, seed: int = 0,
+            microbatches: int = 0, vocab_size: int = 0) -> Iterator[Dict]:
+    """Infinite iterator of {tokens (B,S) int32, loss_mask (B,S) f32}.
+    With microbatches>0 shapes become (M, B, S) for lax.scan accumulation.
+    Pass vocab_size to build a tokenizer matched to the model's vocab."""
+    tok = tokenizer or (HashTokenizer(vocab_size) if vocab_size
+                        else default_tokenizer())
+    stream = token_stream(tok, seed)
+    eff = batch_size * max(1, microbatches)
+    while True:
+        buf = np.fromiter(itertools.islice(stream, eff * seq_len),
+                          np.int32, count=eff * seq_len)
+        tokens = buf.reshape(eff, seq_len)
+        mask = (tokens != 0).astype(np.float32)
+        if microbatches:
+            tokens = tokens.reshape(microbatches, batch_size, seq_len)
+            mask = mask.reshape(microbatches, batch_size, seq_len)
+        yield {"tokens": jnp.asarray(tokens), "loss_mask": jnp.asarray(mask)}

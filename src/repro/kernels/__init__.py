@@ -1,0 +1,3 @@
+# Pallas TPU kernels for the perf-critical hot-spots (retrieval MIPS +
+# attention), each with a jit'd wrapper in ops.py and a pure-jnp oracle in
+# ref.py.  Validated in interpret mode on CPU; BlockSpecs target v5e VMEM.

@@ -1,0 +1,99 @@
+"""Flash-decode: single-token attention against a long KV cache.
+
+Grid: (B, K, num_t_blocks) — cache dim innermost/sequential.  The one query
+token (per kv-head group) stays resident in VMEM while (block_t, D) cache
+tiles stream from HBM; online-softmax partials merge in VMEM scratch.  This
+is the kernel shape that serves decode_32k / long_500k: arithmetic intensity
+is O(1) FLOP/byte, so the roofline is HBM-bandwidth-bound and the only thing
+that matters is streaming the cache exactly once at full bandwidth.
+
+Valid-length masking comes from a per-batch kv_len operand so one compiled
+kernel serves ragged batches (continuous batching in serving/engine.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_s, l_s, acc_s, *,
+            block_t: int, num_t_blocks: int, scale: float, window: int):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    kv_len = len_ref[0]
+    t_start = t * block_t
+
+    @pl.when(t_start < kv_len)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)            # (G, D)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bt, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        pos = t_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        ok = pos < kv_len
+        if window > 0:
+            ok = ok & (pos > kv_len - 1 - window)
+        s = jnp.where(ok, s, NEG_INF)                  # (G, bt)
+
+        m_prev = m_s[...]
+        m_new = jnp.maximum(m_prev, s.max(-1))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_s[...] = l_s[...] * corr + p.sum(-1)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_s[...] = acc_s[...] * corr[..., None] + pv
+        m_s[...] = m_new
+
+    @pl.when(t == num_t_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_s[...], 1e-37)
+        o_ref[0, 0] = (acc_s[...] / l[..., None]).astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, kv_len, *, scale=None, window: int = 0,
+                     block_t: int = 512, interpret: bool = False):
+    """q: (B, K, G, D) one token; k, v: (B, K, T, D); kv_len: (B,) i32
+    (#valid cache slots, the new token already written).  -> (B, K, G, D)."""
+    B, K, G, D = q.shape
+    T = k.shape[2]
+    scale = scale if scale is not None else D ** -0.5
+    bt = min(block_t, T)
+    Tp = -(-T // bt) * bt
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, Tp - T), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, Tp - T), (0, 0)))
+    nt = Tp // bt
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_t=bt, num_t_blocks=nt, scale=scale,
+                          window=window),
+        grid=(B, K, nt),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, t: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bt, D), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, bt, D), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1,), lambda b, h, t: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, t: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, K, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, kp, vp, kv_len.astype(jnp.int32))
+    return out

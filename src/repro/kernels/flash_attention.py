@@ -1,0 +1,112 @@
+"""Blocked causal flash attention (prefill/training), GQA-aware.
+
+Grid: (B, K, num_q_blocks, num_kv_blocks) — kv innermost/sequential.
+Per-(b, kv-head) the G grouped query heads ride along inside the block, so
+GQA shares each K/V tile across its query group directly in VMEM (the reason
+GQA exists).  Online-softmax state (m, l, acc) lives in VMEM scratch and the
+output block is written on the last kv step.  Upper-triangular kv blocks are
+skipped via pl.when (the causal-skip the pure-jnp path lacks — see
+EXPERIMENTS.md §Perf).
+
+VMEM budget per step (defaults bq=256, bk=512, D≤256, G≤8, f32 scratch):
+q (G·bq·D) + k/v (2·bk·D) + acc (G·bq·D) ≈ 2-6 MiB — fits v5e's 16 MiB VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
+            block_q: int, block_k: int, num_kv_blocks: int, causal: bool,
+            window: int, scale: float, t_valid: int):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q_start = i * block_q
+    k_start = j * block_k
+    # causal skip: a kv block strictly above the diagonal contributes nothing
+    needed = (not causal) or (k_start <= q_start + block_q - 1)
+
+    @pl.when(needed)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)          # (G, bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((2,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        # (G, bq, bk)
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+        ok = k_pos < t_valid          # mask padded cache tail
+        if causal:
+            ok = ok & (k_pos <= q_pos)
+        if window > 0:
+            ok = ok & (k_pos > q_pos - window)
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_s[...]
+        l_prev = l_s[...]
+        m_new = jnp.maximum(m_prev, s.max(-1))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_s[...] = l_prev * corr + p.sum(-1)
+        pv = jax.lax.dot_general(p, v, (((2,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_s[...] = acc_s[...] * corr[..., None] + pv
+        m_s[...] = m_new
+
+    @pl.when(j == num_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_s[...], 1e-37)
+        o_ref[0, 0] = (acc_s[...] / l[..., None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    scale=None, block_q: int = 256, block_k: int = 512,
+                    interpret: bool = False):
+    """q: (B, K, G, S, D); k, v: (B, K, T, D)  ->  (B, K, G, S, D)."""
+    B, K, G, S, D = q.shape
+    T = k.shape[2]
+    scale = scale if scale is not None else D ** -0.5
+    bq = min(block_q, S)
+    bk = min(block_k, T)
+    Sp = -(-S // bq) * bq
+    Tp = -(-T // bk) * bk
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, 0), (0, Sp - S), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, Tp - T), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, Tp - T), (0, 0)))
+    nq, nk = Sp // bq, Tp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_q=bq, block_k=bk, num_kv_blocks=nk,
+                          causal=causal, window=window, scale=scale,
+                          t_valid=T),
+        grid=(B, K, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, bq, D), lambda b, h, i, j: (b, h, 0, i, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, bq, D), lambda b, h, i, j: (b, h, 0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, K, G, Sp, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, bq), jnp.float32),        # running max m
+            pltpu.VMEM((G, bq), jnp.float32),        # running denom l
+            pltpu.VMEM((G, bq, D), jnp.float32),     # output accumulator
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :, :, :S]

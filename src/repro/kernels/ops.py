@@ -1,0 +1,47 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in Pallas interpret mode — the
+kernel bodies run exactly as written, validated against ref.py oracles; on a
+real TPU backend interpret is off and the same BlockSpecs drive VMEM tiling.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import decode_attention as _da
+from repro.kernels import flash_attention as _fa
+from repro.kernels import topk_mips as _tm
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_q", "block_n", "interpret"))
+def topk_mips(queries, bank, k: int = 32, *, block_q: int = 128,
+              block_n: int = 512, interpret: bool | None = None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _tm.topk_mips(queries, bank, k, block_q=block_q, block_n=block_n,
+                         interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
+                                             "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    scale=None, block_q: int = 256, block_k: int = 512,
+                    interpret: bool | None = None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               scale=scale, block_q=block_q, block_k=block_k,
+                               interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "window", "block_t",
+                                             "interpret"))
+def decode_attention(q, k, v, kv_len, *, scale=None, window: int = 0,
+                     block_t: int = 512, interpret: bool | None = None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _da.decode_attention(q, k, v, kv_len, scale=scale, window=window,
+                                block_t=block_t, interpret=interpret)

@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def topk_mips_ref(queries, bank, k: int = 32):
+    """queries (Q,D), bank (N,D) -> (scores (Q,k) f32, indices (Q,k) i32)."""
+    s = jnp.einsum("qd,nd->qn", queries.astype(jnp.float32),
+                   bank.astype(jnp.float32))
+    scores, idx = jax.lax.top_k(s, k)
+    return scores, idx.astype(jnp.int32)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        scale=None):
+    """q: (B,K,G,S,D); k,v: (B,K,T,D) -> (B,K,G,S,D)."""
+    B, K, G, S, D = q.shape
+    T = k.shape[2]
+    scale = scale if scale is not None else D ** -0.5
+    s = jnp.einsum("bkgsd,bktd->bkgst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(S)[:, None]
+    k_pos = jnp.arange(T)[None, :]
+    ok = jnp.ones((S, T), bool)
+    if causal:
+        ok = ok & (k_pos <= q_pos)
+    if window > 0:
+        ok = ok & (k_pos > q_pos - window)
+    s = jnp.where(ok, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgst,bktd->bkgsd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, kv_len, *, scale=None, window: int = 0):
+    """q: (B,K,G,D); k,v: (B,K,T,D); kv_len (B,) -> (B,K,G,D)."""
+    B, K, G, D = q.shape
+    T = k.shape[2]
+    scale = scale if scale is not None else D ** -0.5
+    s = jnp.einsum("bkgd,bktd->bkgt", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    pos = jnp.arange(T)[None, None, None, :]
+    kl = kv_len[:, None, None, None]
+    ok = pos < kl
+    if window > 0:
+        ok = ok & (pos > kl - 1 - window)
+    s = jnp.where(ok, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,bktd->bkgd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,92 @@
+"""Fused top-k maximum-inner-product search over the Memori triple bank.
+
+This is the TPU-native replacement for the paper's FAISS index (DESIGN.md
+§3): the embedding bank is streamed HBM→VMEM in (block_n, D) tiles, scored
+against the resident query tile on the MXU, and a running top-k (scores +
+global indices) is maintained in the revisited output block across the
+sequential bank-block grid dimension.
+
+Exact search is deliberate: Advanced Augmentation compresses dialogue to
+~10⁶-scale triples, small enough that exact MIPS beats pointer-chasing ANN
+structures on TPU.
+
+Grid: (num_q_blocks, num_bank_blocks)   — bank dim innermost/sequential.
+Per-step top-k merge is an unrolled k-iteration argmax sweep (Pallas-TPU
+friendly: no sort, no scatter).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -2.0e38
+
+
+def _merge_topk(scores_ref, idx_ref, s, col, k: int):
+    """Merge block scores s (Qb, Nb) with the running (Qb, k) top-k refs."""
+    all_s = jnp.concatenate([scores_ref[...], s], axis=1)
+    all_i = jnp.concatenate([idx_ref[...], col], axis=1)
+    cols = jax.lax.broadcasted_iota(jnp.int32, all_s.shape, 1)
+    for j in range(k):
+        m = jnp.max(all_s, axis=1)
+        am = jnp.argmax(all_s, axis=1)
+        hit = cols == am[:, None]
+        sel_i = jnp.sum(jnp.where(hit, all_i, 0), axis=1)
+        scores_ref[:, j] = m
+        idx_ref[:, j] = sel_i
+        all_s = jnp.where(hit, NEG_INF, all_s)
+
+
+def _kernel(q_ref, bank_ref, scores_ref, idx_ref, *, block_n: int, k: int,
+            n_valid: int):
+    nb = pl.program_id(1)
+
+    @pl.when(nb == 0)
+    def _init():
+        scores_ref[...] = jnp.full_like(scores_ref, NEG_INF)
+        idx_ref[...] = jnp.full_like(idx_ref, -1)
+
+    q = q_ref[...]
+    b = bank_ref[...]
+    s = jax.lax.dot_general(q, b, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)     # (Qb, Nb)
+    col = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1) + nb * block_n
+    s = jnp.where(col < n_valid, s, NEG_INF)   # mask padded bank rows
+    _merge_topk(scores_ref, idx_ref, s, col, k)
+
+
+def topk_mips(queries, bank, k: int = 32, *, block_q: int = 128,
+              block_n: int = 512, interpret: bool = False):
+    """queries (Q, D) · bank (N, D) -> (scores (Q, k) f32, indices (Q, k) i32).
+    Rows beyond N (padding) never appear: padded bank rows score NEG_INF."""
+    Q, D = queries.shape
+    N = bank.shape[0]
+    bq = min(block_q, max(8, Q))
+    bn = min(block_n, max(8, N))
+    Qp = -(-Q // bq) * bq
+    Np = -(-N // bn) * bn
+    qp = jnp.pad(queries, ((0, Qp - Q), (0, 0)))
+    bp = jnp.pad(bank, ((0, Np - N), (0, 0)))
+
+    grid = (Qp // bq, Np // bn)
+    scores, idx = pl.pallas_call(
+        functools.partial(_kernel, block_n=bn, k=k, n_valid=N),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, D), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, D), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Qp, k), jnp.float32),
+            jax.ShapeDtypeStruct((Qp, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(qp, bp)
+    return scores[:Q], idx[:Q]

@@ -1,0 +1,54 @@
+"""Production serving launcher: pjit'd prefill + decode on a real mesh, with
+the Memori memory layer in front.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b [--multipod]
+    PYTHONPATH=src python -m repro.launch.serve --host-demo
+"""
+import argparse
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="memori-agent")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--host-demo", action="store_true")
+    ap.add_argument("--max-len", type=int, default=128)
+    args = ap.parse_args()
+
+    if args.host_demo:
+        os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=4 "
+                                   + os.environ.get("XLA_FLAGS", ""))
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.core import MemoriClient, MemoriMemory
+    from repro.core.embedder import HashEmbedder
+    from repro.data.tokenizer import HashTokenizer
+    from repro.models.model_api import Model
+    from repro.serving.engine import Engine
+    from repro.serving.sampler import SamplerConfig
+
+    cfg = get_config(args.arch)
+    if args.host_demo:
+        cfg = cfg.reduced(layers=2, d_model=128)
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    tok = HashTokenizer(cfg.vocab_size)
+    engine = Engine(model, params, max_len=args.max_len, slots=2,
+                    sampler=SamplerConfig(temperature=0.8, top_k=40),
+                    tokenizer=tok)
+    memory = MemoriMemory(HashEmbedder(), budget=800, use_kernel=False)
+    client = MemoriClient(
+        lambda p: engine.generate([p[-500:]], max_new_tokens=12)[0], memory)
+
+    print(client.chat("I work as a translator and I live in Cusco."))
+    client.end_session()
+    ctx = memory.retrieve("Where does the user live?")
+    print(f"retrieved {len(ctx.triples)} triples, {ctx.token_count} tokens")
+    print("engine:", engine.stats)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,174 @@
+"""Step builders: pjit'd train / prefill / decode steps with full sharding
+specifications for any (arch, input shape, mesh).
+
+The same builders serve the real launchers (train.py / serve.py) and the
+AOT dry-run (dryrun.py): the dry-run lowers them against ShapeDtypeStructs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.common import partitioning as pt
+from repro.common.module import abstract, shardings_of
+from repro.models.config import InputShape, ModelConfig
+from repro.models.model_api import Model
+from repro.training import optimizer as opt
+
+PyTree = Any
+
+# FSDP threshold: above this many params, fp32 optimizer state at pure
+# model-parallel sharding cannot fit 256 × 16 GiB; shard params over data too.
+FSDP_PARAM_THRESHOLD = 5e9
+# Above this, even fp32 moments are untenable — bf16 optimizer state.
+BF16_OPT_THRESHOLD = 100e9
+
+
+@dataclasses.dataclass
+class StepBundle:
+    """Everything dryrun/launchers need for one (arch, shape, mesh)."""
+    fn: Any                       # the jit'd function
+    args: tuple                   # ShapeDtypeStruct (or concrete) args
+    rules: pt.MeshRules
+    meta: Dict[str, Any]
+
+
+def _batch_sharding(rules: pt.MeshRules, spec_dict: Dict[str, jax.ShapeDtypeStruct]):
+    out = {}
+    for k, v in spec_dict.items():
+        axes = ("batch",) + (None,) * (len(v.shape) - 1)
+        out[k] = rules.sharding_for(axes, v.shape)
+    return out
+
+
+def opt_config_for(cfg: ModelConfig) -> opt.OptimizerConfig:
+    n = cfg.param_count()
+    return opt.OptimizerConfig(
+        state_dtype="bfloat16" if n > BF16_OPT_THRESHOLD else "float32")
+
+
+def use_fsdp(cfg: ModelConfig) -> bool:
+    return cfg.param_count() > FSDP_PARAM_THRESHOLD
+
+
+def build_train_step(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                     *, fsdp: Optional[bool] = None) -> StepBundle:
+    model = Model(cfg)
+    fsdp = use_fsdp(cfg) if fsdp is None else fsdp
+    rules = pt.standard_rules(mesh, fsdp=fsdp)
+    ocfg = opt_config_for(cfg)
+
+    param_sh = model.param_shardings(rules)
+    opt_sh = opt.OptState(
+        step=NamedSharding(mesh, P()), mu=param_sh, nu=param_sh)
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            loss, metrics = model.train_loss(p, batch, rules=rules)
+            return loss, metrics
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params2, opt_state2, om = opt.update(ocfg, params, grads, opt_state)
+        metrics.update(om)
+        return params2, opt_state2, metrics
+
+    aparams = abstract(model.param_specs(), cfg.pdtype)
+    sdt = jnp.dtype(ocfg.state_dtype)
+    aopt = opt.OptState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        mu=jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, sdt), aparams),
+        nu=jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, sdt), aparams))
+    abatch = model.input_specs(shape)
+    batch_sh = _batch_sharding(rules, abatch)
+
+    fn = jax.jit(train_step,
+                 in_shardings=(param_sh, opt_sh, batch_sh),
+                 out_shardings=(param_sh, opt_sh, None),
+                 donate_argnums=(0, 1))
+    return StepBundle(fn=fn, args=(aparams, aopt, abatch), rules=rules,
+                      meta={"kind": "train", "fsdp": fsdp,
+                            "opt_dtype": ocfg.state_dtype})
+
+
+def build_prefill_step(cfg: ModelConfig, shape: InputShape, mesh: Mesh) -> StepBundle:
+    model = Model(cfg)
+    rules = pt.standard_rules(mesh)
+    param_sh = model.param_shardings(rules)
+
+    def prefill_step(params, batch):
+        logits, caches = model.prefill(params, batch, rules=rules)
+        return logits, caches
+
+    aparams = abstract(model.param_specs(), cfg.pdtype)
+    abatch = model.input_specs(shape)
+    batch_sh = _batch_sharding(rules, abatch)
+    fn = jax.jit(prefill_step, in_shardings=(param_sh, batch_sh))
+    return StepBundle(fn=fn, args=(aparams, abatch), rules=rules,
+                      meta={"kind": "prefill"})
+
+
+def build_decode_step(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                      *, kv_replicated: bool = False) -> StepBundle:
+    """serve_step: ONE new token against a cache of shape.seq_len.
+
+    kv_replicated (§Perf pair 3): disable the head_dim fallback so
+    non-divisible kv heads replicate over `model` instead of being
+    head_dim-sharded — avoids XLA all-gathering the whole cache per layer."""
+    import dataclasses as _dc
+    model = Model(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    long_ctx = shape.name == "long_500k"
+    window_override = (cfg.long_context_window or None) if long_ctx else None
+    # batch=1 long-context decode: context-parallel over the cache sequence
+    rules = pt.long_context_rules(mesh) if (long_ctx and B < mesh.shape["data"]) \
+        else pt.standard_rules(mesh)
+    if kv_replicated:
+        rules = _dc.replace(rules, head_dim_fallback=False)
+
+    param_sh = model.param_shardings(rules)
+    acaches = model.abstract_caches(B, S, window_override=window_override)
+    cache_sh = jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec),
+        model.cache_pspecs(B, S, rules, window_override=window_override))
+
+    def decode_step(params, tokens, caches, pos):
+        logits, new_caches = model.decode_step(
+            params, tokens, caches, pos, rules=rules,
+            window_override=window_override)
+        return logits, new_caches
+
+    atokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    apos = jax.ShapeDtypeStruct((B,), jnp.int32)
+    tok_sh = rules.sharding_for(("batch", None), (B, 1))
+    pos_sh = rules.sharding_for(("batch",), (B,))
+    fn = jax.jit(decode_step,
+                 in_shardings=(param_sh, tok_sh, cache_sh, pos_sh),
+                 out_shardings=(None, cache_sh),
+                 donate_argnums=(2,))
+    return StepBundle(fn=fn, args=(abstract(model.param_specs(), cfg.pdtype),
+                                   atokens, acaches, apos),
+                      rules=rules,
+                      meta={"kind": "decode", "long_ctx": long_ctx,
+                            "window_override": window_override})
+
+
+def build_step(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+               variant: str = "") -> StepBundle:
+    if shape.kind == "train":
+        return build_train_step(cfg, shape, mesh)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, shape, mesh)
+    return build_decode_step(cfg, shape, mesh,
+                             kv_replicated="kv_replicated" in variant)
+
+
+def supported(cfg: ModelConfig, shape: InputShape) -> tuple[bool, str]:
+    """Skip policy (documented in DESIGN.md §9)."""
+    if shape.name == "long_500k":
+        if not cfg.supports_long_context:
+            return False, ("full-attention enc-dec (whisper): no faithful "
+                           "sliding-window variant; skipped per DESIGN.md §9")
+    return True, ""

@@ -1,0 +1,144 @@
+"""Residual blocks: (mixer, ffn) pairs assembled from the layer zoo.
+
+A block kind is a (mixer_kind, ffn_kind) tuple from ModelConfig.layer_kinds():
+mixer ∈ {attn, ssm, rglru}, ffn ∈ {mlp, moe, none}.  Pre-norm residual wiring,
+with stablelm-style parallel residual as a config option, and optional
+cross-attention (whisper decoder).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.layers import attention, mla, mlp, moe, norms, rglru, ssm
+
+AUX_KEYS = ("moe_load_balance", "moe_router_z", "moe_drop_fraction")
+
+
+def zero_aux():
+    return {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
+
+
+def block_specs(cfg, kind, *, cross: bool = False):
+    mixer_kind, ffn_kind = kind
+    s = {"norm1": norms.specs(cfg)}
+    if mixer_kind == "attn":
+        s["attn"] = mla.specs(cfg) if cfg.use_mla else attention.specs(cfg)
+    elif mixer_kind == "ssm":
+        s["ssm"] = ssm.specs(cfg)
+    elif mixer_kind == "rglru":
+        s["rglru"] = rglru.specs(cfg)
+    else:
+        raise ValueError(mixer_kind)
+    if cross:
+        s["norm_cross"] = norms.specs(cfg)
+        s["cross_attn"] = attention.specs(cfg, cross=True)
+    if ffn_kind == "mlp":
+        s["norm2"] = norms.specs(cfg)
+        s["mlp"] = mlp.specs(cfg)
+    elif ffn_kind == "moe":
+        s["norm2"] = norms.specs(cfg)
+        s["moe"] = moe.specs(cfg)
+    return s
+
+
+def block_cache_specs(cfg, kind, batch, max_len, dtype, *, cross: bool = False,
+                      enc_len: int = 0, window: int = 0):
+    """Returns {name: (shape, logical_axes, dtype)} for this block's caches."""
+    mixer_kind, _ = kind
+    out = {}
+    if mixer_kind == "attn":
+        cs = mla.cache_specs(cfg, batch, max_len, dtype) if cfg.use_mla \
+            else attention.cache_specs(cfg, batch, max_len, dtype, window=window)
+        out.update(cs)
+    elif mixer_kind == "ssm":
+        out.update(ssm.cache_specs(cfg, batch, dtype))
+    elif mixer_kind == "rglru":
+        out.update(rglru.cache_specs(cfg, batch, dtype))
+    if cross:
+        kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        out["cross_k"] = ((batch, enc_len, kv, hd), ("batch", None, "kv_heads", "head_dim"), dtype)
+        out["cross_v"] = ((batch, enc_len, kv, hd), ("batch", None, "kv_heads", "head_dim"), dtype)
+    return out
+
+
+def apply(params, cfg, x, kind, *, mode, positions, cache=None, cache_pos=None,
+          mask_kind="causal", window=0, prefix_len=None, enc_out=None,
+          enc_positions=None, rules=None, return_cache=False, use_rope=True):
+    """One residual block.  Returns (x, new_cache, aux)."""
+    mixer_kind, ffn_kind = kind
+    aux = zero_aux()
+    new_cache = {}
+    h = norms.apply(params["norm1"], cfg, x)
+
+    sub_cache = None
+    if cache is not None and mixer_kind == "attn":
+        if cfg.use_mla:
+            sub_cache = {k: cache[k] for k in ("ckv", "k_rope") if k in cache}
+        else:
+            sub_cache = {k: cache[k] for k in
+                         ("k", "v", "pos", "k_scale", "v_scale") if k in cache}
+        sub_cache = sub_cache or None
+    elif cache is not None and mixer_kind in ("ssm", "rglru"):
+        keys = ("conv", "state") if mixer_kind == "ssm" else ("conv", "h")
+        sub_cache = {k: cache[k] for k in keys if k in cache} or None
+
+    if mixer_kind == "attn":
+        if cfg.use_mla:
+            attn_out, c = mla.apply(
+                params["attn"], cfg, h, positions=positions, mode=mode,
+                cache=sub_cache, cache_pos=cache_pos, window=window,
+                return_cache=return_cache, mask_kind=mask_kind,
+                prefix_len=prefix_len)
+        else:
+            attn_out, c = attention.apply(
+                params["attn"], cfg, h, positions=positions, mode=mode,
+                cache=sub_cache, cache_pos=cache_pos, mask_kind=mask_kind,
+                window=window, prefix_len=prefix_len, use_rope=use_rope,
+                return_cache=return_cache)
+        if c:
+            new_cache.update(c)
+        mixed = attn_out
+    elif mixer_kind == "ssm":
+        mixed, c = ssm.apply(params["ssm"], cfg, h, mode=mode, cache=sub_cache,
+                             return_cache=return_cache)
+        if c:
+            new_cache.update(c)
+    else:  # rglru
+        mixed, c = rglru.apply(params["rglru"], cfg, h, mode=mode,
+                               cache=sub_cache, return_cache=return_cache)
+        if c:
+            new_cache.update(c)
+
+    if cfg.parallel_residual and ffn_kind == "mlp":
+        # stablelm-style: x + attn(n(x)) + mlp(n(x)) with a single norm
+        ff = mlp.apply(params["mlp"], cfg, norms.apply(params["norm2"], cfg, x))
+        x = x + mixed + ff
+    else:
+        x = x + mixed
+        if enc_out is not None or "cross_attn" in params:
+            hc = norms.apply(params["norm_cross"], cfg, x)
+            if mode == "decode":
+                cross_cache = {"k": cache["cross_k"], "v": cache["cross_v"]}
+                cross_out, _ = attention.apply(
+                    params["cross_attn"], cfg, hc, positions=positions,
+                    mode="cross_decode", cache=cross_cache, use_rope=False)
+                new_cache["cross_k"] = cache["cross_k"]
+                new_cache["cross_v"] = cache["cross_v"]
+            else:
+                cross_out, cc = attention.apply(
+                    params["cross_attn"], cfg, hc, positions=positions,
+                    kv_x=enc_out, kv_positions=enc_positions, mode=mode,
+                    use_rope=False, return_cache=return_cache)
+                if cc:
+                    new_cache["cross_k"] = cc["k"]
+                    new_cache["cross_v"] = cc["v"]
+            x = x + cross_out
+        if ffn_kind == "mlp":
+            h2 = norms.apply(params["norm2"], cfg, x)
+            x = x + mlp.apply(params["mlp"], cfg, h2)
+        elif ffn_kind == "moe":
+            h2 = norms.apply(params["norm2"], cfg, x)
+            y, aux = moe.apply(params["moe"], cfg, h2, rules=rules)
+            x = x + y
+
+    return x, (new_cache if new_cache else None), aux

@@ -1,0 +1,344 @@
+"""Multi-head attention with GQA, partial RoPE, qk-norm, sliding-window,
+prefix-LM and cross-attention — the single attention module used by every
+attention-bearing architecture in the zoo.
+
+Two numerics paths:
+  * direct SDPA for small S*T (smoke tests, decode single-token queries);
+  * chunked online-softmax SDPA (pure-JAX flash attention via lax.scan) for
+    long sequences, so prefill_32k / train_4k never materialise (S, T) score
+    or mask tensors.  The Pallas kernels in `repro.kernels` implement the
+    same contract for real TPU hardware and are checked against these.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.module import ParamSpec
+from repro.models.layers import rope as rope_lib
+from repro.models.layers.norms import rms_norm
+
+NEG_INF = -2.0e38
+_DIRECT_LIMIT = 4 * 1024 * 1024   # max S*T for the direct path
+
+
+def specs(cfg, *, cross: bool = False):
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    s = {
+        "wq": ParamSpec((d, h, hd), ("embed", "heads", "head_dim"),
+                        init="scaled_normal", scale=1.0),
+        "wk": ParamSpec((d, kv, hd), ("embed", "kv_heads", "head_dim"),
+                        init="scaled_normal", scale=1.0),
+        "wv": ParamSpec((d, kv, hd), ("embed", "kv_heads", "head_dim"),
+                        init="scaled_normal", scale=1.0),
+        "wo": ParamSpec((h, hd, d), ("heads", "head_dim", "embed"),
+                        init="scaled_normal", scale=1.0),
+    }
+    if cfg.qkv_bias and not cross:
+        s["bq"] = ParamSpec((h, hd), ("heads", "head_dim"), init="zeros")
+        s["bk"] = ParamSpec((kv, hd), ("kv_heads", "head_dim"), init="zeros")
+        s["bv"] = ParamSpec((kv, hd), ("kv_heads", "head_dim"), init="zeros")
+    if cfg.qk_norm:
+        s["q_norm"] = ParamSpec((hd,), ("head_dim",), init="ones")
+        s["k_norm"] = ParamSpec((hd,), ("head_dim",), init="ones")
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Masking (built from position arrays so chunked blocks can mask locally).
+# ---------------------------------------------------------------------------
+
+def _allowed(q_pos, kv_pos, *, kind: str, window: int, prefix_len,
+             kv_len_valid):
+    """Boolean allowed-mask (B, Sq, Tk) from (B,Sq) and (B,Tk) positions.
+    kv positions < 0 are padding and always masked."""
+    q = q_pos[:, :, None]
+    t = kv_pos[:, None, :]
+    B, S = q_pos.shape
+    T = kv_pos.shape[1]
+    if kind == "bidir":
+        allowed = jnp.broadcast_to(t >= 0, (B, S, T))
+    else:
+        allowed = t <= q
+        if kind == "prefix" and prefix_len is not None:
+            pl = prefix_len if jnp.ndim(prefix_len) else jnp.full((q_pos.shape[0],), prefix_len)
+            allowed = allowed | (t < pl[:, None, None])
+    if window and window > 0:
+        allowed = allowed & (t > q - window)
+    if kv_len_valid is not None:
+        kl = kv_len_valid if jnp.ndim(kv_len_valid) else jnp.full((q_pos.shape[0],), kv_len_valid)
+        allowed = allowed & (t < kl[:, None, None])
+    allowed = allowed & (t >= 0)
+    return allowed
+
+
+# ---------------------------------------------------------------------------
+# SDPA: direct and chunked.
+# ---------------------------------------------------------------------------
+
+def _group(q, k, v):
+    B, S, H, Dh = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, S, K, G, Dh).transpose(0, 2, 3, 1, 4)   # (B,K,G,S,D)
+    kk = k.transpose(0, 2, 1, 3)                               # (B,K,T,D)
+    vv = v.transpose(0, 2, 1, 3)
+    return qg, kk, vv, (B, S, H, K, G, Dh)
+
+
+def _ungroup(out, B, S, H, Dh):
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, Dh)
+
+
+def _sdpa_direct(q, k, v, allowed, scale):
+    qg, kk, vv, (B, S, H, K, G, Dh) = _group(q, k, v)
+    scores = jnp.einsum("bkgsd,bktd->bkgst", qg, kk,
+                        preferred_element_type=jnp.float32) * scale
+    scores = jnp.where(allowed[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,bktd->bkgsd", probs.astype(v.dtype), vv,
+                     preferred_element_type=jnp.float32)
+    return _ungroup(out.astype(q.dtype), B, S, H, v.shape[-1])
+
+
+def _sdpa_chunked(q, k, v, q_pos, kv_pos, *, kind, window, prefix_len,
+                  kv_len_valid, scale, q_block, kv_block, unroll=False):
+    """Online-softmax blocked attention: O(q_block*kv_block) live scores."""
+    B, S, H, Dh = q.shape
+    T, K = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = H // K
+
+    qb = min(q_block, S)
+    kb = min(kv_block, T)
+    Sp = -(-S // qb) * qb
+    Tp = -(-T // kb) * kb
+    q = jnp.pad(q, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    k = jnp.pad(k, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    q_pos = jnp.pad(q_pos, ((0, 0), (0, Sp - S)))
+    kv_pos = jnp.pad(kv_pos, ((0, 0), (0, Tp - T)), constant_values=-1)
+
+    nq, nk = Sp // qb, Tp // kb
+    # (nq, B, K, G, qb, D) and (nk, B, K, kb, D)
+    qs = q.reshape(B, nq, qb, K, G, Dh).transpose(1, 0, 3, 4, 2, 5)
+    ks = k.reshape(B, nk, kb, K, Dh).transpose(1, 0, 3, 2, 4)
+    vs = v.reshape(B, nk, kb, K, Dv).transpose(1, 0, 3, 2, 4)
+    qps = q_pos.reshape(B, nq, qb).transpose(1, 0, 2)
+    kps = kv_pos.reshape(B, nk, kb).transpose(1, 0, 2)
+
+    def q_step(q_blk_in):
+        qblk, qp = q_blk_in                      # (B,K,G,qb,D), (B,qb)
+
+        def kv_step(carry, kv_blk_in):
+            m, l, acc = carry
+            kblk, vblk, kp = kv_blk_in
+            s = jnp.einsum("bkgsd,bktd->bkgst", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            ok = _allowed(qp, kp, kind=kind, window=window,
+                          prefix_len=prefix_len, kv_len_valid=kv_len_valid)
+            s = jnp.where(ok[:, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            corr = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * corr + p.sum(-1)
+            pv = jnp.einsum("bkgst,bktd->bkgsd", p.astype(vblk.dtype), vblk,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, K, G, qb), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, K, G, qb), jnp.float32)
+        a0 = jnp.zeros((B, K, G, qb, Dv), jnp.float32)
+        if unroll:      # probe mode: XLA cost analysis counts scan bodies once
+            carry = (m0, l0, a0)
+            for t in range(ks.shape[0]):
+                carry, _ = kv_step(carry, (ks[t], vs[t], kps[t]))
+            m, l, acc = carry
+        else:
+            (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (ks, vs, kps))
+        out = acc / jnp.maximum(l, 1e-37)[..., None]
+        return out.astype(q.dtype)               # (B,K,G,qb,D)
+
+    if unroll:
+        outs = jnp.stack([q_step((qs[i], qps[i])) for i in range(nq)])
+    else:
+        outs = jax.lax.map(q_step, (qs, qps))     # (nq,B,K,G,qb,Dv)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sp, H, Dv)
+    return out[:, :S]
+
+
+def attend(q, k, v, *, q_pos, kv_pos, kind: str = "causal", window: int = 0,
+           prefix_len=None, kv_len_valid=None, scale: Optional[float] = None,
+           q_block: int = 512, kv_block: int = 1024, unroll: bool = False):
+    """Dispatching SDPA.  q: (B,S,H,Dh), k/v: (B,T,K,Dh)."""
+    S, T = q.shape[1], k.shape[1]
+    scale = scale if scale is not None else q.shape[-1] ** -0.5
+    if S * T <= _DIRECT_LIMIT or S == 1:
+        allowed = _allowed(q_pos, kv_pos, kind=kind, window=window,
+                           prefix_len=prefix_len, kv_len_valid=kv_len_valid)
+        return _sdpa_direct(q, k, v, allowed, scale)
+    if unroll:
+        # probe mode: unrolled blocks must stay few or XLA CPU compile time
+        # explodes; FLOP totals are block-size independent, so count with
+        # coarse blocks (these never execute on real VMEM)
+        q_block = max(q_block, -(-S // 16))
+        kv_block = max(kv_block, -(-T // 8))
+    return _sdpa_chunked(q, k, v, q_pos, kv_pos, kind=kind, window=window,
+                         prefix_len=prefix_len, kv_len_valid=kv_len_valid,
+                         scale=scale, q_block=q_block, kv_block=kv_block,
+                         unroll=unroll)
+
+
+# ---------------------------------------------------------------------------
+# Module apply.
+# ---------------------------------------------------------------------------
+
+def _project_qkv(params, cfg, x, kv_x=None, *, use_rope=True, positions=None,
+                 kv_positions=None, theta=None):
+    kv_x = x if kv_x is None else kv_x
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    k = jnp.einsum("btd,dhk->bthk", kv_x, params["wk"].astype(dt))
+    v = jnp.einsum("btd,dhk->bthk", kv_x, params["wv"].astype(dt))
+    if "bq" in params:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    if "q_norm" in params:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    if use_rope:
+        th = theta if theta is not None else cfg.rope_theta
+        q = rope_lib.apply_rope(q, positions, theta=th, pct=cfg.rope_pct)
+        k = rope_lib.apply_rope(k, kv_positions, theta=th, pct=cfg.rope_pct)
+    return q, k, v
+
+
+def apply(params, cfg, x, *, positions, mode: str = "train",
+          cache=None, cache_pos=None, mask_kind: str = "causal",
+          window: int = 0, prefix_len=None, kv_x=None, kv_positions=None,
+          use_rope: bool = True, theta=None, return_cache: bool = False):
+    """Unified attention entry point; returns (out (B,S,D), new_cache|None)."""
+    B = x.shape[0]
+    dt = x.dtype
+    new_cache = None
+
+    if mode in ("train", "prefill"):
+        kv_pos = kv_positions if kv_positions is not None else positions
+        q, k, v = _project_qkv(params, cfg, x, kv_x, use_rope=use_rope,
+                               positions=positions, kv_positions=kv_pos,
+                               theta=theta)
+        out = attend(q, k, v, q_pos=positions, kv_pos=kv_pos,
+                     kind=("bidir" if kv_x is not None else mask_kind),
+                     window=window, prefix_len=prefix_len,
+                     unroll=cfg.force_unroll)
+        if return_cache:
+            new_cache = {"k": k, "v": v}
+    elif mode == "decode":
+        T = cache["k"].shape[1]
+        q, k_new, v_new = _project_qkv(
+            params, cfg, x, None, use_rope=use_rope,
+            positions=positions, kv_positions=positions, theta=theta)
+        # per-row cache positions (continuous batching: each slot has its own
+        # sequence length); scalar cache_pos broadcasts.
+        pos = jnp.asarray(cache_pos)
+        if pos.ndim == 0:
+            pos = jnp.broadcast_to(pos, (B,))
+        rows = jnp.arange(B)
+        ring = "pos" in cache                  # ring-buffer sliding window
+        quant = "k_scale" in cache             # int8-quantised cache (§Perf)
+        idx = pos % T if ring else pos
+        new_cache = {}
+
+        if quant:
+            kq, ksc = quantize_kv(k_new[:, 0])
+            vq, vsc = quantize_kv(v_new[:, 0])
+            k_store = cache["k"].at[rows, idx].set(kq)
+            v_store = cache["v"].at[rows, idx].set(vq)
+            k_sc = cache["k_scale"].at[rows, idx].set(ksc)
+            v_sc = cache["v_scale"].at[rows, idx].set(vsc)
+            k_use = dequantize_kv(k_store, k_sc, dt)
+            v_use = dequantize_kv(v_store, v_sc, dt)
+            new_cache.update({"k_scale": k_sc, "v_scale": v_sc})
+        else:
+            k_store = cache["k"].at[rows, idx].set(
+                k_new[:, 0].astype(cache["k"].dtype))
+            v_store = cache["v"].at[rows, idx].set(
+                v_new[:, 0].astype(cache["v"].dtype))
+            k_use = k_store.astype(dt)
+            v_use = v_store.astype(dt)
+        new_cache.update({"k": k_store, "v": v_store})
+
+        if ring:
+            # Fixed window-sized cache, write slot = pos % W, true positions
+            # tracked per slot so masking stays exact — this is what makes
+            # dense-arch long_500k feasible (a 500k cache is never allocated).
+            pos_arr = cache["pos"].at[rows, idx].set(pos.astype(jnp.int32))
+            out = attend(q, k_use, v_use, q_pos=positions, kv_pos=pos_arr,
+                         kind="causal", window=window)
+            new_cache["pos"] = pos_arr
+        else:
+            kv_pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+            out = attend(q, k_use, v_use, q_pos=positions, kv_pos=kv_pos,
+                         kind="causal", window=window, kv_len_valid=pos + 1)
+    elif mode == "cross_decode":
+        q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+        if "q_norm" in params:
+            q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k, v = cache["k"].astype(dt), cache["v"].astype(dt)
+        T = k.shape[1]
+        kv_pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+        out = attend(q, k, v, q_pos=positions, kv_pos=kv_pos, kind="bidir")
+        new_cache = cache
+    else:
+        raise ValueError(mode)
+
+    proj = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
+    return proj, new_cache
+
+
+def quantize_kv(x):
+    """Symmetric per-(token, head) int8 quantisation.  x: (..., D)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_kv(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def cache_specs(cfg, batch: int, max_len: int, dtype, *, window: int = 0):
+    """(shape, logical_axes, dtype) per cache entry.  window>0 and < max_len
+    selects the ring-buffer layout (fixed window-sized cache + slot
+    positions); cfg.kv_cache_quant == "int8" stores int8 values + per-token
+    scales (halves the decode cache footprint — §Perf)."""
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    ring = window and 0 < window < max_len
+    quant = cfg.kv_cache_quant == "int8"
+    T = window if ring else max_len
+    shape = (batch, T, kv, hd)
+    axes = ("batch", "seq", "kv_heads", "head_dim")
+    kv_dtype = jnp.int8 if quant else dtype
+    out = {"k": (shape, axes, kv_dtype), "v": (shape, axes, kv_dtype)}
+    if quant:
+        out["k_scale"] = ((batch, T, kv), ("batch", "seq", "kv_heads"), jnp.float32)
+        out["v_scale"] = ((batch, T, kv), ("batch", "seq", "kv_heads"), jnp.float32)
+    if ring:
+        out["pos"] = ((batch, T), ("batch", "seq"), jnp.int32)
+    return out
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype, *, window: int = 0):
+    out = {}
+    for name, (shape, _axes, dt) in cache_specs(cfg, batch, max_len, dtype,
+                                                window=window).items():
+        fill = -1 if name == "pos" else 0
+        out[name] = jnp.full(shape, fill, dt)
+    return out

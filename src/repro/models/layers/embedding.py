@@ -1,0 +1,31 @@
+"""Token embedding + (optionally tied) output head."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.common.module import ParamSpec
+
+
+def specs(cfg):
+    s = {"table": ParamSpec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                            init="normal", scale=0.02)}
+    if not cfg.tie_embeddings:
+        s["unembed"] = ParamSpec((cfg.d_model, cfg.vocab_size), ("embed", "vocab"),
+                                 init="scaled_normal", scale=1.0)
+    return s
+
+
+def embed(params, cfg, tokens):
+    # clip (not NaN-fill) on out-of-range ids: tokenizer/vocab mismatches
+    # should degrade, not poison the whole forward.
+    x = jnp.take(params["table"], tokens, axis=0, mode="clip")
+    return x.astype(cfg.cdtype)
+
+
+def logits(params, cfg, x):
+    if cfg.tie_embeddings:
+        w = params["table"].astype(cfg.cdtype)
+        out = jnp.einsum("...d,vd->...v", x, w)
+    else:
+        out = jnp.einsum("...d,dv->...v", x, params["unembed"].astype(cfg.cdtype))
+    return out.astype(jnp.dtype(cfg.logits_dtype))

@@ -1,0 +1,159 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3, arXiv:2412.19437).
+
+Train/prefill use the decompressed form (standard MHA over reconstructed
+K/V, chunked online-softmax attention so 32k prefill never materialises
+(S,T) scores).  Decode uses the *absorbed* form: scores are computed directly
+against the compressed latent cache
+
+    score[h,t] = (W_UK[h]^T q_nope[h]) . c_kv[t]  +  q_rope[h] . k_rope[t]
+
+so the per-token cache is only (kv_lora_rank + qk_rope_head_dim) floats —
+the whole point of MLA — and the 500k/32k decode caches stay tiny.  The
+latent cache is shared across all heads (it cannot shard over `heads`; it
+shards over batch, or over `seq` for long_500k context parallelism).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.module import ParamSpec
+from repro.models.layers import rope as rope_lib
+from repro.models.layers.attention import attend
+from repro.models.layers.norms import rms_norm
+
+NEG_INF = -2.0e38
+
+
+def specs(cfg):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    qk_hd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wdq": ParamSpec((d, m.q_lora_rank), ("embed", None), init="scaled_normal", scale=1.0),
+        "q_norm": ParamSpec((m.q_lora_rank,), (None,), init="ones"),
+        "wuq": ParamSpec((m.q_lora_rank, h, qk_hd), (None, "heads", "head_dim"),
+                         init="scaled_normal", scale=1.0),
+        "wdkv": ParamSpec((d, m.kv_lora_rank), ("embed", None), init="scaled_normal", scale=1.0),
+        "kv_norm": ParamSpec((m.kv_lora_rank,), (None,), init="ones"),
+        "wkr": ParamSpec((d, m.qk_rope_head_dim), ("embed", "head_dim"),
+                         init="scaled_normal", scale=1.0),
+        "wuk": ParamSpec((m.kv_lora_rank, h, m.qk_nope_head_dim), (None, "heads", "head_dim"),
+                         init="scaled_normal", scale=1.0),
+        "wuv": ParamSpec((m.kv_lora_rank, h, m.v_head_dim), (None, "heads", "head_dim"),
+                         init="scaled_normal", scale=1.0),
+        "wo": ParamSpec((h, m.v_head_dim, d), ("heads", "head_dim", "embed"),
+                        init="scaled_normal", scale=1.0),
+    }
+
+
+def _q_proj(params, cfg, x, positions):
+    m = cfg.mla
+    dt = x.dtype
+    cq = jnp.einsum("bsd,dr->bsr", x, params["wdq"].astype(dt))
+    cq = rms_norm(cq, params["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, params["wuq"].astype(dt))
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = rope_lib.apply_rope(q[..., m.qk_nope_head_dim:], positions,
+                                 theta=cfg.rope_theta, pct=1.0)
+    return q_nope, q_rope
+
+
+def _latent_proj(params, cfg, x, positions):
+    dt = x.dtype
+    ckv = jnp.einsum("bsd,dr->bsr", x, params["wdkv"].astype(dt))
+    ckv = rms_norm(ckv, params["kv_norm"], cfg.norm_eps)
+    k_rope = jnp.einsum("bsd,dk->bsk", x, params["wkr"].astype(dt))
+    k_rope = rope_lib.apply_rope(k_rope, positions, theta=cfg.rope_theta, pct=1.0)
+    return ckv, k_rope
+
+
+def apply(params, cfg, x, *, positions, mode: str = "train", cache=None,
+          cache_pos=None, window: int = 0, return_cache: bool = False,
+          mask_kind: str = "causal", prefix_len=None):
+    m = cfg.mla
+    dt = x.dtype
+    B = x.shape[0]
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    new_cache = None
+
+    if mode in ("train", "prefill"):
+        q_nope, q_rope = _q_proj(params, cfg, x, positions)
+        ckv, k_rope = _latent_proj(params, cfg, x, positions)
+        if cfg.mla_absorbed_train:
+            # §Perf variant: absorbed form in train/prefill too — W_UK folds
+            # into q, attention runs against the latent (one shared kv head,
+            # Dq = r + rope, Dv = r); the decompressed (B,S,H,192/128) K/V
+            # never materialise.  Trades ~(r+rope)/Dqk x more score FLOPs for
+            # a large activation-bytes reduction (see EXPERIMENTS.md §Perf).
+            q_eff = jnp.einsum("bshk,rhk->bshr", q_nope, params["wuk"].astype(dt))
+            q2 = jnp.concatenate([q_eff, q_rope], axis=-1)    # (B,S,H,r+rope)
+            k2 = jnp.concatenate([ckv, k_rope], axis=-1)[:, :, None]  # (B,T,1,·)
+            v2 = ckv[:, :, None]                               # (B,T,1,r)
+            o_lat = attend(q2, k2, v2, q_pos=positions, kv_pos=positions,
+                           kind=mask_kind, window=window,
+                           prefix_len=prefix_len, scale=scale,
+                           unroll=cfg.force_unroll)            # (B,S,H,r)
+            out = jnp.einsum("bshr,rhk->bshk", o_lat, params["wuv"].astype(dt))
+        else:
+            # Decompressed K/V: (B,S,H,*)
+            k_nope = jnp.einsum("bsr,rhk->bshk", ckv, params["wuk"].astype(dt))
+            v = jnp.einsum("bsr,rhk->bshk", ckv, params["wuv"].astype(dt))
+            H = k_nope.shape[2]
+            k = jnp.concatenate(
+                [k_nope, jnp.broadcast_to(k_rope[:, :, None], (*k_rope.shape[:2], H, k_rope.shape[-1]))],
+                axis=-1)
+            q = jnp.concatenate([q_nope, q_rope], axis=-1)
+            out = attend(q, k, v, q_pos=positions, kv_pos=positions,
+                         kind=mask_kind, window=window, prefix_len=prefix_len,
+                         scale=scale, unroll=cfg.force_unroll)
+        if return_cache:
+            new_cache = {"ckv": ckv, "k_rope": k_rope}
+    elif mode == "decode":
+        # Absorbed decode against the latent cache.
+        q_nope, q_rope = _q_proj(params, cfg, x, positions)        # (B,1,H,*)
+        ckv_new, kr_new = _latent_proj(params, cfg, x, positions)  # (B,1,r)
+        pos = jnp.asarray(cache_pos)
+        if pos.ndim == 0:
+            pos = jnp.broadcast_to(pos, (B,))
+        rows = jnp.arange(B)
+        ckv = cache["ckv"].at[rows, pos].set(ckv_new[:, 0].astype(cache["ckv"].dtype))
+        k_rope = cache["k_rope"].at[rows, pos].set(
+            kr_new[:, 0].astype(cache["k_rope"].dtype))
+        T = ckv.shape[1]
+        # Absorb W_UK into q: q_eff (B,1,H,r)
+        q_eff = jnp.einsum("bshk,rhk->bshr", q_nope, params["wuk"].astype(dt))
+        s_nope = jnp.einsum("bshr,btr->bhst", q_eff, ckv.astype(dt))
+        s_rope = jnp.einsum("bshk,btk->bhst", q_rope, k_rope.astype(dt))
+        scores = (s_nope + s_rope).astype(jnp.float32) * scale     # (B,H,1,T)
+        t_idx = jnp.arange(T)[None, None, None, :]
+        posb = pos[:, None, None, None]
+        ok = t_idx <= posb
+        if window and window > 0:
+            ok = ok & (t_idx > posb - window)
+        scores = jnp.where(ok, scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(dt)
+        o_lat = jnp.einsum("bhst,btr->bshr", probs, ckv.astype(dt))  # (B,1,H,r)
+        out = jnp.einsum("bshr,rhk->bshk", o_lat, params["wuv"].astype(dt))
+        new_cache = {"ckv": ckv, "k_rope": k_rope}
+    else:
+        raise ValueError(mode)
+
+    proj = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
+    return proj, new_cache
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype):
+    m = cfg.mla
+    return {
+        "ckv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype),
+    }
+
+
+def cache_specs(cfg, batch: int, max_len: int, dtype):
+    m = cfg.mla
+    return {
+        "ckv": ((batch, max_len, m.kv_lora_rank), ("batch", "seq", None), dtype),
+        "k_rope": ((batch, max_len, m.qk_rope_head_dim), ("batch", "seq", None), dtype),
+    }

@@ -1,0 +1,32 @@
+"""Dense MLP: gated (SwiGLU/GeGLU) or plain 2-layer."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.module import ParamSpec
+
+
+def _act(cfg, x):
+    return jax.nn.silu(x) if cfg.act == "silu" else jax.nn.gelu(x)
+
+
+def specs(cfg, d_ff: int | None = None):
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    s = {
+        "wi": ParamSpec((d, ff), ("embed", "ff"), init="scaled_normal", scale=1.0),
+        "wo": ParamSpec((ff, d), ("ff", "embed"), init="scaled_normal", scale=1.0),
+    }
+    if cfg.mlp_gated:
+        s["wg"] = ParamSpec((d, ff), ("embed", "ff"), init="scaled_normal", scale=1.0)
+    return s
+
+
+def apply(params, cfg, x):
+    h = jnp.einsum("...d,df->...f", x, params["wi"].astype(x.dtype))
+    if cfg.mlp_gated:
+        g = jnp.einsum("...d,df->...f", x, params["wg"].astype(x.dtype))
+        h = _act(cfg, g) * h
+    else:
+        h = _act(cfg, h)
+    return jnp.einsum("...f,fd->...d", h, params["wo"].astype(x.dtype))

@@ -1,0 +1,35 @@
+"""RMSNorm / LayerNorm (param specs + apply)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.common.module import ParamSpec
+
+
+def specs(cfg, dim: int | None = None):
+    d = dim or cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"scale": ParamSpec((d,), ("embed",), init="ones"),
+                "bias": ParamSpec((d,), ("embed",), init="zeros")}
+    return {"scale": ParamSpec((d,), ("embed",), init="ones")}
+
+
+def apply(params, cfg, x):
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mean = xf.mean(-1, keepdims=True)
+        var = ((xf - mean) ** 2).mean(-1, keepdims=True)
+        y = (xf - mean) / jnp.sqrt(var + cfg.norm_eps)
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    else:
+        var = (xf * xf).mean(-1, keepdims=True)
+        y = xf / jnp.sqrt(var + cfg.norm_eps)
+        y = y * params["scale"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def rms_norm(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = (xf * xf).mean(-1, keepdims=True)
+    return ((xf / jnp.sqrt(var + eps)) * scale.astype(jnp.float32)).astype(x.dtype)

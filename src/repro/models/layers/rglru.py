@@ -1,0 +1,138 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block layout (Griffin "recurrent block"):
+    x ── linear ─ conv1d ─ RG-LRU ──┐
+    x ── linear ─ GeLU ─────────────┴─ ⊙ ── linear out
+
+RG-LRU:  r_t = σ(W_a x_t + b_a),  i_t = σ(W_x x_t + b_x)
+         a_t = exp(-c · softplus(Λ) · r_t)
+         h_t = a_t h_{t-1} + sqrt(1 - a_t²) · (i_t ⊙ x_t)
+
+Training/prefill run the recurrence as a jax.lax.associative_scan (log-depth
+on TPU); decode is the O(1) step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.module import ParamSpec
+
+
+def width(cfg):
+    return cfg.rglru.width or cfg.d_model
+
+
+def specs(cfg):
+    d = cfg.d_model
+    w = width(cfg)
+    W = cfg.rglru.conv_width
+    return {
+        "in_proj_x": ParamSpec((d, w), ("embed", "state"), init="scaled_normal", scale=1.0),
+        "in_proj_gate": ParamSpec((d, w), ("embed", "state"), init="scaled_normal", scale=1.0),
+        "conv_w": ParamSpec((W, w), (None, "state"), init="scaled_normal", scale=1.0),
+        "conv_b": ParamSpec((w,), ("state",), init="zeros"),
+        "wa": ParamSpec((w, w), ("state", None), init="scaled_normal", scale=1.0),
+        "ba": ParamSpec((w,), ("state",), init="zeros"),
+        "wx": ParamSpec((w, w), ("state", None), init="scaled_normal", scale=1.0),
+        "bx": ParamSpec((w,), ("state",), init="zeros"),
+        "lam": ParamSpec((w,), ("state",), init="rglru_lambda"),
+        "out_proj": ParamSpec((w, d), ("state", "embed"), init="scaled_normal", scale=1.0),
+    }
+
+
+def _causal_conv(x, w, b):
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    return sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W)) + b
+
+
+def _gates(params, cfg, xb):
+    f32 = jnp.float32
+    r = jax.nn.sigmoid(jnp.einsum("blw,wv->blv", xb.astype(f32), params["wa"].astype(f32))
+                       + params["ba"].astype(f32))
+    i = jax.nn.sigmoid(jnp.einsum("blw,wv->blv", xb.astype(f32), params["wx"].astype(f32))
+                       + params["bx"].astype(f32))
+    log_a = -cfg.rglru.c_exponent * jax.nn.softplus(params["lam"].astype(f32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xb.astype(f32))
+    return a, b
+
+
+def apply(params, cfg, x, *, mode: str = "train", cache=None,
+          return_cache: bool = False):
+    """x: (B,L,d); cache = {"conv": (B,W-1,w), "h": (B,w)}."""
+    dt_ = x.dtype
+    B_, L, d = x.shape
+    W = cfg.rglru.conv_width
+
+    xb = jnp.einsum("bld,dw->blw", x, params["in_proj_x"].astype(dt_))
+    gate = jnp.einsum("bld,dw->blw", x, params["in_proj_gate"].astype(dt_))
+
+    if mode == "decode":
+        window = jnp.concatenate([cache["conv"].astype(dt_), xb], axis=1)
+        conv_out = (window * params["conv_w"].astype(dt_)).sum(1, keepdims=True)
+        conv_out = conv_out + params["conv_b"].astype(dt_)
+        new_conv = window[:, 1:]
+        a, b = _gates(params, cfg, conv_out)
+        h = a[:, 0] * cache["h"].astype(jnp.float32) + b[:, 0]
+        y = h[:, None]
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
+                     "h": h.astype(cache["h"].dtype)}
+    else:
+        conv_out = _causal_conv(xb, params["conv_w"].astype(dt_),
+                                params["conv_b"].astype(dt_))
+        a, b = _gates(params, cfg, conv_out)
+        if mode == "prefill" and cache is not None:
+            # fold the incoming state into the first step
+            b = b.at[:, 0].add(a[:, 0] * cache["h"].astype(jnp.float32))
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        Q = 1024   # two-level recurrence: assoc-scan within chunks, lax.scan
+        if L > Q:  # across chunks — bounds XLA compile for 32k+ prefills
+            if L % Q:
+                pad = Q - L % Q
+                a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+                b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+            nc = a.shape[1] // Q
+            w = a.shape[-1]
+            ac = a.reshape(B_, nc, Q, w).transpose(1, 0, 2, 3)
+            bc = b.reshape(B_, nc, Q, w).transpose(1, 0, 2, 3)
+
+            def chunk_step(h_prev, inp):
+                a_blk, b_blk = inp                       # (B, Q, w)
+                A_pre, B_pre = jax.lax.associative_scan(
+                    combine, (a_blk, b_blk), axis=1)
+                h_blk = A_pre * h_prev[:, None] + B_pre  # prefix · carry + local
+                return h_blk[:, -1], h_blk
+
+            h0 = jnp.zeros((B_, w), jnp.float32)
+            _, h_chunks = jax.lax.scan(chunk_step, h0, (ac, bc))
+            h_seq = h_chunks.transpose(1, 0, 2, 3).reshape(B_, nc * Q, w)[:, :L]
+        else:
+            _, h_seq = jax.lax.associative_scan(combine, (a, b), axis=1)
+        y = h_seq
+        new_cache = None
+        if return_cache:
+            new_cache = {"conv": xb[:, -(W - 1):].astype(dt_),
+                         "h": h_seq[:, -1].astype(dt_)}
+
+    y = y.astype(dt_) * jax.nn.gelu(gate)
+    out = jnp.einsum("blw,wd->bld", y, params["out_proj"].astype(dt_))
+    return out, new_cache
+
+
+def init_cache(cfg, batch: int, dtype):
+    w = width(cfg)
+    return {"conv": jnp.zeros((batch, cfg.rglru.conv_width - 1, w), dtype),
+            "h": jnp.zeros((batch, w), dtype)}
+
+
+def cache_specs(cfg, batch: int, dtype):
+    w = width(cfg)
+    return {"conv": ((batch, cfg.rglru.conv_width - 1, w), ("batch", None, "state"), dtype),
+            "h": ((batch, w), ("batch", "state"), dtype)}

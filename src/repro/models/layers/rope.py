@@ -1,0 +1,41 @@
+"""Rotary position embeddings (GPT-NeoX half-split layout), with partial
+rotary support (stablelm rotates only the first 25% of head_dim)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _freqs(rot_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim))
+
+
+def apply_rope(x, positions, *, theta: float = 10000.0, pct: float = 1.0):
+    """x: (..., S, H, Dh) or (..., S, Dh);  positions: broadcastable to (..., S)."""
+    head_dim = x.shape[-1]
+    rot = int(head_dim * pct)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    inv = _freqs(rot, theta)                       # (rot/2,)
+    ang = positions.astype(jnp.float32)[..., None] * inv   # (..., S, rot/2)
+    # broadcast over the heads dim if present
+    extra = x.ndim - ang.ndim
+    for _ in range(extra):
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2:]
+    rotated = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+    return jnp.concatenate([rotated, xp], axis=-1) if rot < head_dim else rotated
+
+
+def sinusoidal_positions(seq_len: int, dim: int, dtype=jnp.float32):
+    """Whisper-style sinusoidal embeddings (adapted for both enc and dec so
+    decode positions are unbounded — see DESIGN.md hardware adaptation)."""
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    inv = 1.0 / (10000.0 ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = pos * inv
+    emb = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+    return emb[:, :dim].astype(dtype)

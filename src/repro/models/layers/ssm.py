@@ -1,0 +1,199 @@
+"""Mamba-2 SSD block (state-space duality, arXiv:2405.21060).
+
+TPU adaptation (DESIGN.md §3): training/prefill use the *chunked SSD matmul
+form* — intra-chunk attention-like einsums plus an inter-chunk state scan —
+which maps the recurrence onto MXU matmuls instead of a length-L sequential
+scan (the CUDA kernel's approach doesn't transfer; the block-matrix algebra
+does, and is exactly the paper's "duality").  Decode is the O(1) recurrent
+state update.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.module import ParamSpec
+
+
+def dims(cfg):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.head_dim
+    return d_in, H, s.n_groups, s.state_dim, s.head_dim, s.conv_width
+
+
+def specs(cfg):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, H, G, N, P, W = dims(cfg)
+    conv_dim = d_in + 2 * G * N
+    return {
+        "in_proj": ParamSpec((d, 2 * d_in + 2 * G * N + H), ("embed", "state"),
+                             init="scaled_normal", scale=1.0),
+        "conv_w": ParamSpec((W, conv_dim), (None, "state"), init="scaled_normal", scale=1.0),
+        "conv_b": ParamSpec((conv_dim,), ("state",), init="zeros"),
+        "A_log": ParamSpec((H,), ("state",), init="ssm_alog"),
+        "D": ParamSpec((H,), ("state",), init="ones"),
+        "dt_bias": ParamSpec((H,), ("state",), init="ssm_dt_bias"),
+        "norm_scale": ParamSpec((d_in,), ("state",), init="ones"),
+        "out_proj": ParamSpec((d_in, d), ("state", "embed"), init="scaled_normal", scale=1.0),
+    }
+
+
+def _split_proj(cfg, proj):
+    d_in, H, G, N, P, W = dims(cfg)
+    z, xs, Bc, Cc, dt = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + G * N, 2 * d_in + 2 * G * N], axis=-1)
+    return z, xs, Bc, Cc, dt
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B,L,C), w: (W,C)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    return out + b
+
+
+def _gated_norm(y, z, scale, eps):
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    var = (yf * yf).mean(-1, keepdims=True)
+    return ((yf / jnp.sqrt(var + eps)) * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def apply(params, cfg, x, *, mode: str = "train", cache=None,
+          return_cache: bool = False):
+    """x: (B,L,d).  mode train/prefill: chunked SSD over the full sequence
+    (optionally emitting a decode cache); mode decode: single-step with
+    cache = {"conv": (B,W-1,conv_dim), "state": (B,H,P,N)}."""
+    s = cfg.ssm
+    d_in, H, G, N, P, W = dims(cfg)
+    dt_ = x.dtype
+    B_, L, d = x.shape
+
+    proj = jnp.einsum("bld,de->ble", x, params["in_proj"].astype(dt_))
+    z, xs, Bc, Cc, dtp = _split_proj(cfg, proj)
+    xBC = jnp.concatenate([xs, Bc, Cc], axis=-1)
+
+    if mode == "decode":
+        conv_cache = cache["conv"]                  # (B, W-1, conv_dim)
+        window = jnp.concatenate([conv_cache.astype(dt_), xBC], axis=1)  # (B,W,·)
+        conv_out = (window * params["conv_w"].astype(dt_)).sum(1, keepdims=True)
+        conv_out = conv_out + params["conv_b"].astype(dt_)
+        new_conv = window[:, 1:]
+    else:
+        conv_out = _causal_conv(xBC, params["conv_w"].astype(dt_),
+                                params["conv_b"].astype(dt_))
+        new_conv = xBC[:, -(W - 1):] if return_cache else None
+    conv_out = jax.nn.silu(conv_out)
+    xs, Bc, Cc = jnp.split(conv_out, [d_in, d_in + G * N], axis=-1)
+
+    xh = xs.reshape(B_, L, H, P)
+    Bg = Bc.reshape(B_, L, G, N)
+    Cg = Cc.reshape(B_, L, G, N)
+    # broadcast groups over heads
+    rep = H // G
+    Bh = jnp.repeat(Bg, rep, axis=2)                # (B,L,H,N)
+    Ch = jnp.repeat(Cg, rep, axis=2)
+    dt_full = jax.nn.softplus(dtp.astype(jnp.float32)
+                              + params["dt_bias"].astype(jnp.float32))  # (B,L,H)
+    A = jnp.exp(params["A_log"].astype(jnp.float32))                     # (H,)
+    log_a = -dt_full * A                                                  # (B,L,H)
+    dtx = xh * dt_full.astype(dt_)[..., None]                             # (B,L,H,P)
+
+    if mode == "decode":
+        # h: (B,H,P,N);  h' = exp(log_a) h + dtx ⊗ B;  y = h'·C + D x
+        h = cache["state"].astype(jnp.float32)
+        a = jnp.exp(log_a[:, 0])[:, :, None, None]                        # (B,H,1,1)
+        upd = jnp.einsum("bhp,bhn->bhpn", dtx[:, 0].astype(jnp.float32),
+                         Bh[:, 0].astype(jnp.float32))
+        h_new = a * h + upd
+        y = jnp.einsum("bhpn,bhn->bhp", h_new, Ch[:, 0].astype(jnp.float32))
+        y = y + params["D"].astype(jnp.float32)[:, None] * xh[:, 0].astype(jnp.float32)
+        y = y.reshape(B_, 1, d_in).astype(dt_)
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
+                     "state": h_new.astype(cache["state"].dtype)}
+    else:
+        Q = min(s.chunk_size, L)
+        if L % Q != 0:
+            pad = Q - L % Q
+            xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            Bh = jnp.pad(Bh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            Ch = jnp.pad(Ch, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dtx = jnp.pad(dtx, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            log_a = jnp.pad(log_a, ((0, 0), (0, pad), (0, 0)))
+            Lp = L + pad
+        else:
+            Lp = L
+        nc = Lp // Q
+        xc = dtx.reshape(B_, nc, Q, H, P)
+        bc = Bh.reshape(B_, nc, Q, H, N)
+        cc = Ch.reshape(B_, nc, Q, H, N)
+        la = log_a.reshape(B_, nc, Q, H)
+        la_cum = jnp.cumsum(la, axis=2)                                   # (B,nc,Q,H)
+        la_tot = la_cum[:, :, -1]                                         # (B,nc,H)
+
+        # Intra-chunk (the "attention" dual): scores[s,t] = C_s·B_t e^{la_s-la_t}
+        cb = jnp.einsum("bcshn,bcthn->bchst", cc, bc,
+                        preferred_element_type=jnp.float32)
+        seg = la_cum.transpose(0, 1, 3, 2)                                # (B,nc,H,Q)
+        ldiff = seg[..., :, None] - seg[..., None, :]                     # (B,nc,H,Q,Q)
+        causal = jnp.tril(jnp.ones((Q, Q), bool))
+        L_mat = jnp.where(causal, jnp.exp(ldiff), 0.0)
+        y_intra = jnp.einsum("bchst,bcthp->bcshp", cb * L_mat,
+                             xc.astype(jnp.float32))
+
+        # Chunk summary states: S_c = Σ_t e^{la_tot - la_t} B_t ⊗ x_t
+        decay_to_end = jnp.exp(la_tot[:, :, None] - la_cum)               # (B,nc,Q,H)
+        S_c = jnp.einsum("bcthn,bcthp->bchnp",
+                         (bc * decay_to_end[..., None]).astype(jnp.float32),
+                         xc.astype(jnp.float32))                          # (B,nc,H,N,P)
+
+        # Inter-chunk recurrence over nc chunks (tiny scan, nc = L/Q).
+        a_chunk = jnp.exp(la_tot)                                         # (B,nc,H)
+        init = (cache["state"].astype(jnp.float32).transpose(0, 1, 3, 2)
+                if (mode == "prefill" and cache is not None)
+                else jnp.zeros((B_, H, N, P), jnp.float32))
+
+        def chunk_step(h, inp):
+            ac, sc = inp                                                  # (B,H), (B,H,N,P)
+            h_new = h * ac[..., None, None] + sc
+            return h_new, h                                               # emit state *before* chunk
+
+        (h_last, h_prevs) = jax.lax.scan(
+            chunk_step, init,
+            (a_chunk.transpose(1, 0, 2), S_c.transpose(1, 0, 2, 3, 4)))
+        h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)                        # (B,nc,H,N,P)
+
+        # Inter-chunk contribution: y_inter[s] = e^{la_s} C_s · h_prev
+        decay_in = jnp.exp(la_cum)                                        # (B,nc,Q,H)
+        y_inter = jnp.einsum("bcshn,bchnp->bcshp", cc.astype(jnp.float32),
+                             h_prevs) * decay_in[..., None]
+        y = (y_intra + y_inter).reshape(B_, Lp, H, P)[:, :L]
+        y = y + params["D"].astype(jnp.float32)[:, None] * xh.reshape(B_, Lp, H, P)[:, :L].astype(jnp.float32)
+        y = y.reshape(B_, L, d_in).astype(dt_)
+        new_cache = None
+        if return_cache:
+            new_cache = {"conv": new_conv.astype(dt_),
+                         "state": h_last.transpose(0, 1, 3, 2).astype(dt_)}
+
+    y = _gated_norm(y, z, params["norm_scale"], cfg.norm_eps)
+    out = jnp.einsum("ble,ed->bld", y, params["out_proj"].astype(dt_))
+    return out, new_cache
+
+
+def init_cache(cfg, batch: int, dtype):
+    d_in, H, G, N, P, W = dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, W - 1, d_in + 2 * G * N), dtype),
+        "state": jnp.zeros((batch, H, P, N), dtype),
+    }
+
+
+def cache_specs(cfg, batch: int, dtype):
+    d_in, H, G, N, P, W = dims(cfg)
+    return {
+        "conv": ((batch, W - 1, d_in + 2 * G * N), ("batch", None, "state"), dtype),
+        "state": ((batch, H, P, N), ("batch", "state", None, None), dtype),
+    }

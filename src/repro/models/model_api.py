@@ -1,0 +1,281 @@
+"""Model facade: one API over the whole zoo.
+
+  model = Model(cfg)
+  params = model.init_params(key)
+  loss, metrics = model.train_loss(params, batch)
+  logits, caches = model.prefill(params, batch)
+  logits, caches = model.decode_step(params, tokens, caches, pos)
+
+Batches are dicts:
+  tokens  (B, S) int32                      — always
+  images  (B, P, vision_dim)                — vlm (stub SigLIP patch embeds)
+  audio   (B, F, d_model)                   — audio (stub conv/mel frames)
+  loss_mask (B, S) f32                      — optional
+
+Cross-entropy is computed in sequence chunks (lax.map) so (B, S, vocab)
+logits are never materialised — required for 129k-vocab training at 4k seq.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import partitioning
+from repro.common.module import ParamSpec, abstract, materialize, shardings_of, spec_tree_to_pspecs
+from repro.models import blocks, transformer
+from repro.models.config import InputShape, ModelConfig
+from repro.models.layers import embedding, norms, rope as rope_lib
+
+PyTree = Any
+
+
+def encoder_cfg(cfg: ModelConfig) -> ModelConfig:
+    return dataclasses.replace(
+        cfg, num_layers=cfg.encoder_layers, arch_type="dense", use_moe=False,
+        use_mla=False, hybrid_period=0, first_k_dense=0, mtp_depth=0,
+        sliding_window=0, is_encoder_decoder=False)
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # -- specs / init --------------------------------------------------------
+    def param_specs(self) -> PyTree:
+        cfg = self.cfg
+        s = {"embed": embedding.specs(cfg),
+             **transformer.decoder_specs(cfg, cross=cfg.is_encoder_decoder)}
+        if cfg.is_encoder_decoder:
+            s["encoder"] = transformer.decoder_specs(encoder_cfg(cfg))
+        if cfg.num_image_tokens:
+            s["img_proj"] = {
+                "w": ParamSpec((cfg_vision_dim(cfg), cfg.d_model), (None, "embed"),
+                               init="scaled_normal", scale=1.0),
+                "b": ParamSpec((cfg.d_model,), ("embed",), init="zeros"),
+            }
+        if cfg.mtp_depth:
+            s["mtp"] = {
+                "proj": ParamSpec((2 * cfg.d_model, cfg.d_model),
+                                  ("embed", None), init="scaled_normal", scale=1.0),
+                "norm_h": norms.specs(cfg),
+                "norm_e": norms.specs(cfg),
+                "block": blocks.block_specs(cfg, ("attn", "mlp")),
+                "final_norm": norms.specs(cfg),
+            }
+        return s
+
+    def init_params(self, key) -> PyTree:
+        return materialize(key, self.param_specs(), self.cfg.pdtype)
+
+    def abstract_params(self) -> PyTree:
+        return abstract(self.param_specs(), self.cfg.pdtype)
+
+    def param_pspecs(self, rules) -> PyTree:
+        return spec_tree_to_pspecs(self.param_specs(), rules)
+
+    def param_shardings(self, rules) -> PyTree:
+        return shardings_of(self.param_specs(), rules)
+
+    # -- embedding front-ends ------------------------------------------------
+    def _embed_inputs(self, params, batch, *, positions_offset: int = 0):
+        """Returns (x (B,S,d), positions (B,S), prefix_len, enc_out, enc_pos)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B = tokens.shape[0]
+        x = embedding.embed(params["embed"], cfg, tokens)
+        prefix_len = None
+        enc_out = enc_pos = None
+
+        if cfg.num_image_tokens and "images" in batch:
+            img = batch["images"].astype(cfg.cdtype)
+            img = jnp.einsum("bpv,vd->bpd", img, params["img_proj"]["w"].astype(cfg.cdtype))
+            img = img + params["img_proj"]["b"].astype(cfg.cdtype)
+            x = jnp.concatenate([img, x], axis=1)
+            prefix_len = cfg.num_image_tokens
+
+        S = x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S)) + positions_offset
+
+        if cfg.is_encoder_decoder and "audio" in batch:
+            enc_out, enc_pos = self.encode(params, batch["audio"])
+            # whisper-style decoder: sinusoidal absolute positions, no rope
+            x = x + rope_lib.sinusoidal_positions(S, cfg.d_model, cfg.cdtype)[None]
+        return x, positions, prefix_len, enc_out, enc_pos
+
+    def encode(self, params, audio_frames):
+        cfg = self.cfg
+        ec = encoder_cfg(cfg)
+        B, F, _ = audio_frames.shape
+        x = audio_frames.astype(cfg.cdtype)
+        x = x + rope_lib.sinusoidal_positions(F, cfg.d_model, cfg.cdtype)[None]
+        pos = jnp.broadcast_to(jnp.arange(F)[None], (B, F))
+        h, _, _ = transformer.decoder_apply(
+            params["encoder"], ec, x, mode="train", positions=pos,
+            mask_kind="bidir", use_rope=False, remat=False)
+        return h, pos
+
+    # -- training ------------------------------------------------------------
+    def train_loss(self, params, batch, *, rules=None):
+        cfg = self.cfg
+        x, positions, prefix_len, enc_out, enc_pos = self._embed_inputs(params, batch)
+        mask_kind = "prefix" if prefix_len is not None else "causal"
+        h, _, aux = transformer.decoder_apply(
+            params, cfg, x, mode="train", positions=positions,
+            mask_kind=mask_kind, prefix_len=prefix_len, enc_out=enc_out,
+            enc_positions=enc_pos, rules=rules,
+            use_rope=not cfg.is_encoder_decoder, remat=True)
+
+        tokens = batch["tokens"]
+        P = prefix_len or 0
+        h_text = h[:, P:]                       # (B, S_text, d)
+        loss_mask = batch.get("loss_mask")
+        ce, acc = _chunked_xent(params, cfg, h_text[:, :-1], tokens[:, 1:],
+                                loss_mask[:, 1:] if loss_mask is not None else None)
+        total = ce + aux["moe_load_balance"] + aux["moe_router_z"]
+        metrics = {"ce": ce, "accuracy": acc, **aux}
+
+        if cfg.mtp_depth:
+            mtp_loss = self._mtp_loss(params, cfg, h_text, tokens, positions[:, P:])
+            total = total + cfg.mtp_loss_weight * mtp_loss
+            metrics["mtp_ce"] = mtp_loss
+        metrics["loss"] = total
+        return total, metrics
+
+    def _mtp_loss(self, params, cfg, h, tokens, positions):
+        """DeepSeek-V3 MTP (depth 1): from h_t and emb(token_{t+1}) predict
+        token_{t+2} through one extra transformer block."""
+        emb_next = embedding.embed(params["embed"], cfg, tokens[:, 1:])
+        hin = jnp.concatenate(
+            [norms.apply(params["mtp"]["norm_h"], cfg, h[:, :-1]),
+             norms.apply(params["mtp"]["norm_e"], cfg, emb_next)], axis=-1)
+        hin = jnp.einsum("bsd,de->bse", hin, params["mtp"]["proj"].astype(hin.dtype))
+        pos = positions[:, :-1]
+        hb, _, _ = blocks.apply(params["mtp"]["block"], cfg, hin, ("attn", "mlp"),
+                                mode="train", positions=pos)
+        hb = norms.apply(params["mtp"]["final_norm"], cfg, hb)
+        ce, _ = _chunked_xent(params, cfg, hb[:, :-1], tokens[:, 2:], None)
+        return ce
+
+    # -- serving -------------------------------------------------------------
+    def prefill(self, params, batch, *, rules=None, window_override=None):
+        cfg = self.cfg
+        x, positions, prefix_len, enc_out, enc_pos = self._embed_inputs(params, batch)
+        mask_kind = "prefix" if prefix_len is not None else "causal"
+        h, caches, _ = transformer.decoder_apply(
+            params, cfg, x, mode="prefill", positions=positions,
+            mask_kind=mask_kind, prefix_len=prefix_len, enc_out=enc_out,
+            enc_positions=enc_pos, rules=rules, window_override=window_override,
+            return_cache=True, use_rope=not cfg.is_encoder_decoder, remat=False)
+        logits = embedding.logits(params["embed"], cfg, h[:, -1:])
+        return logits, caches
+
+    def decode_step(self, params, tokens, caches, cache_pos, *, rules=None,
+                    window_override=None):
+        """tokens: (B, 1); caches from prefill/init_caches; cache_pos is a
+        scalar or a per-slot (B,) vector (continuous batching)."""
+        cfg = self.cfg
+        B = tokens.shape[0]
+        x = embedding.embed(params["embed"], cfg, tokens)
+        pos = jnp.asarray(cache_pos)
+        if pos.ndim == 0:
+            pos = jnp.broadcast_to(pos, (B,))
+        if cfg.is_encoder_decoder:
+            # absolute sinusoidal position = cache_pos (per row)
+            inv = 1.0 / (10000.0 ** (jnp.arange(0, cfg.d_model, 2, dtype=jnp.float32) / cfg.d_model))
+            ang = pos.astype(jnp.float32)[:, None] * inv[None, :]   # (B, d/2)
+            pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)[:, : cfg.d_model]
+            x = x + pe.astype(cfg.cdtype)[:, None]
+        positions = pos[:, None].astype(jnp.int32)
+        h, caches, _ = transformer.decoder_apply(
+            params, cfg, x, mode="decode", positions=positions, caches=caches,
+            cache_pos=cache_pos, rules=rules, window_override=window_override,
+            use_rope=not cfg.is_encoder_decoder, remat=False)
+        logits = embedding.logits(params["embed"], cfg, h)
+        return logits, caches
+
+    def prepare_decode_caches(self, caches, prefill_len, max_len, *,
+                              window_override=None):
+        return transformer.prepare_decode_caches(
+            self.cfg, caches, prefill_len, max_len,
+            window_override=window_override)
+
+    # -- cache helpers ---------------------------------------------------------
+    def init_caches(self, batch, max_len, *, window_override=None):
+        cfg = self.cfg
+        return transformer.init_caches(
+            cfg, batch, max_len, cfg.cdtype, cross=cfg.is_encoder_decoder,
+            enc_len=cfg.encoder_seq_len, window_override=window_override)
+
+    def abstract_caches(self, batch, max_len, *, window_override=None):
+        cfg = self.cfg
+        return transformer.abstract_caches(
+            cfg, batch, max_len, cfg.cdtype, cross=cfg.is_encoder_decoder,
+            enc_len=cfg.encoder_seq_len, window_override=window_override)
+
+    def cache_pspecs(self, batch, max_len, rules, *, window_override=None):
+        cfg = self.cfg
+        return transformer.cache_pspecs(
+            cfg, batch, max_len, cfg.cdtype, rules, cross=cfg.is_encoder_decoder,
+            enc_len=cfg.encoder_seq_len, window_override=window_override)
+
+    # -- abstract inputs for AOT lowering -------------------------------------
+    def input_specs(self, shape: InputShape) -> Dict[str, jax.ShapeDtypeStruct]:
+        """ShapeDtypeStruct stand-ins for every model input (dry-run)."""
+        cfg = self.cfg
+        B = shape.global_batch
+        if shape.kind == "train":
+            S_text = shape.seq_len - (cfg.num_image_tokens or 0)
+            out = {"tokens": jax.ShapeDtypeStruct((B, S_text), jnp.int32)}
+        elif shape.kind == "prefill":
+            S_text = shape.seq_len - (cfg.num_image_tokens or 0)
+            out = {"tokens": jax.ShapeDtypeStruct((B, S_text), jnp.int32)}
+        else:  # decode
+            out = {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+        if cfg.num_image_tokens and shape.kind != "decode":
+            out["images"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_image_tokens, cfg_vision_dim(cfg)), jnp.float32)
+        if cfg.is_encoder_decoder and shape.kind != "decode":
+            out["audio"] = jax.ShapeDtypeStruct(
+                (B, cfg.encoder_seq_len, cfg.d_model), jnp.float32)
+        return out
+
+
+def cfg_vision_dim(cfg) -> int:
+    return 1152  # SigLIP-so400m patch embedding width (stub frontend)
+
+
+def _chunked_xent(params, cfg, h, targets, loss_mask, chunk: int = 256):
+    """Cross-entropy via lax.map over sequence chunks; returns (mean_ce, acc).
+    h: (B, S, d), targets: (B, S)."""
+    B, S, d = h.shape
+    Sp = -(-S // chunk) * chunk
+    hp = jnp.pad(h, ((0, 0), (0, Sp - S), (0, 0)))
+    tp = jnp.pad(targets, ((0, 0), (0, Sp - S)))
+    mp = jnp.ones((B, S), jnp.float32) if loss_mask is None else loss_mask.astype(jnp.float32)
+    mp = jnp.pad(mp, ((0, 0), (0, Sp - S)))
+    nc = Sp // chunk
+    hc = hp.reshape(B, nc, chunk, d).transpose(1, 0, 2, 3)
+    tc = tp.reshape(B, nc, chunk).transpose(1, 0, 2)
+    mc = mp.reshape(B, nc, chunk).transpose(1, 0, 2)
+
+    def one(args):
+        hh, tt, mm = args
+        logits = embedding.logits(params["embed"], cfg, hh)      # (B,c,V) f32
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tt[..., None], axis=-1)[..., 0]
+        ce = (logz - gold) * mm
+        correct = (logits.argmax(-1) == tt) * mm
+        return ce.sum(), correct.sum(), mm.sum()
+
+    if cfg.force_unroll:   # probe mode: count every chunk in HLO cost analysis
+        parts = [one((hc[i], tc[i], mc[i])) for i in range(nc)]
+        ces = jnp.stack([p[0] for p in parts])
+        cors = jnp.stack([p[1] for p in parts])
+        cnts = jnp.stack([p[2] for p in parts])
+    else:
+        ces, cors, cnts = jax.lax.map(one, (hc, tc, mc))
+    denom = jnp.maximum(cnts.sum(), 1.0)
+    return ces.sum() / denom, cors.sum() / denom

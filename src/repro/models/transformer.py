@@ -1,0 +1,267 @@
+"""Decoder stack with scanned layer segments.
+
+Layers are grouped by `plan_segments` into (period_kinds, repeats) segments;
+segments with repeats > 1 are executed with jax.lax.scan over stacked params
+(one layer body in the HLO — tractable AOT compiles for 61-layer configs and
+the standard production pattern).  Heterogeneous patterns (recurrentgemma's
+rglru/rglru/attn, deepseek's 3-dense prefix) become multiple segments.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.module import ParamSpec, stack
+from repro.models import blocks
+from repro.models.config import ModelConfig, plan_segments
+from repro.models.layers import embedding, norms
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+def decoder_specs(cfg: ModelConfig, *, cross: bool = False):
+    segments = []
+    for period, repeats in plan_segments(cfg.layer_kinds()):
+        blks = tuple(blocks.block_specs(cfg, kind, cross=cross) for kind in period)
+        segments.append(stack(blks, repeats) if repeats > 1 else blks)
+    return {"segments": tuple(segments), "final_norm": norms.specs(cfg)}
+
+
+def lm_specs(cfg: ModelConfig, *, cross: bool = False):
+    s = {"embed": embedding.specs(cfg), **decoder_specs(cfg, cross=cross)}
+    return s
+
+
+def decoder_cache_shape_specs(cfg: ModelConfig, batch: int, max_len: int,
+                              dtype, *, cross: bool = False, enc_len: int = 0,
+                              window_override=None):
+    """Mirrors the segment structure with (shape, axes, dtype) leaves."""
+    segments = []
+    for period, repeats in plan_segments(cfg.layer_kinds()):
+        blks = []
+        for kind in period:
+            cs = blocks.block_cache_specs(cfg, kind, batch, max_len, dtype,
+                                          cross=cross, enc_len=enc_len,
+                                          window=_block_window(cfg, kind, window_override))
+            if repeats > 1:
+                cs = {k: ((repeats, *shape), ("layers", *axes), dt)
+                      for k, (shape, axes, dt) in cs.items()}
+            blks.append(cs)
+        segments.append(tuple(blks))
+    return tuple(segments)
+
+
+def _is_shape_leaf(x):
+    return (isinstance(x, tuple) and len(x) == 3 and isinstance(x[0], tuple))
+
+
+def _map_cache_specs(fn, cfg, batch, max_len, dtype, *, cross=False,
+                     enc_len=0, window_override=None):
+    shape_specs = decoder_cache_shape_specs(
+        cfg, batch, max_len, dtype, cross=cross, enc_len=enc_len,
+        window_override=window_override)
+    return jax.tree.map(fn, shape_specs, is_leaf=_is_shape_leaf)
+
+
+def init_caches(cfg, batch, max_len, dtype, *, cross=False, enc_len=0,
+                window_override=None):
+    def make(leaf):
+        shape, axes, dt = leaf
+        fill = -1 if dt == jnp.int32 else 0
+        return jnp.full(shape, fill, dt)
+    return _map_cache_specs(make, cfg, batch, max_len, dtype, cross=cross,
+                            enc_len=enc_len, window_override=window_override)
+
+
+def abstract_caches(cfg, batch, max_len, dtype, *, cross=False, enc_len=0,
+                    window_override=None):
+    def make(leaf):
+        shape, axes, dt = leaf
+        return jax.ShapeDtypeStruct(shape, dt)
+    return _map_cache_specs(make, cfg, batch, max_len, dtype, cross=cross,
+                            enc_len=enc_len, window_override=window_override)
+
+
+def cache_pspecs(cfg, batch, max_len, dtype, rules, *, cross=False, enc_len=0,
+                 window_override=None):
+    def make(leaf):
+        shape, axes, dt = leaf
+        return rules.spec_for(axes, shape)
+    return _map_cache_specs(make, cfg, batch, max_len, dtype, cross=cross,
+                            enc_len=enc_len, window_override=window_override)
+
+
+# ---------------------------------------------------------------------------
+# Prefill-cache -> decode-cache conversion
+# ---------------------------------------------------------------------------
+
+def _pad_seq(x, axis, to_len):
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, to_len - x.shape[axis])
+    return jnp.pad(x, pad)
+
+
+def _ring_slots(S: int, W: int):
+    """Slot j for ring index i after S prefilled tokens (slot i holds the
+    token whose position ≡ i (mod W), among the last W positions)."""
+    i = jnp.arange(W)
+    return S - W + ((i - (S % W)) % W)
+
+
+def _prep_block_cache(bc, prefill_len, max_len, window, quant=""):
+    if bc is None:
+        return None
+    S = prefill_len
+    out = {}
+    ring = bool(window) and 0 < window < max_len
+    for name, x in bc.items():
+        if name in ("k", "v"):
+            axis = x.ndim - 3
+            if ring:
+                W = window
+                x = (jnp.take(x, _ring_slots(S, W), axis=axis)
+                     if S >= W else _pad_seq(x, axis, W))
+            else:
+                x = _pad_seq(x, axis, max_len)
+            if quant == "int8":
+                from repro.models.layers.attention import quantize_kv
+                q, sc = quantize_kv(x)
+                out[name] = q
+                out[name + "_scale"] = sc
+            else:
+                out[name] = x
+        elif name in ("ckv", "k_rope"):
+            out[name] = _pad_seq(x, x.ndim - 2, max_len)
+        else:
+            out[name] = x
+    if ring and "k" in bc:
+        W = window
+        lead = out["k"].shape[: out["k"].ndim - 3]
+        if S >= W:
+            pos1 = _ring_slots(S, W)
+        else:
+            pos1 = jnp.concatenate(
+                [jnp.arange(S), jnp.full((W - S,), -1, jnp.int32)]).astype(jnp.int32)
+        out["pos"] = jnp.broadcast_to(pos1.astype(jnp.int32), (*lead, W))
+    return out
+
+
+def prepare_decode_caches(cfg, caches, prefill_len: int, max_len: int, *,
+                          window_override=None):
+    """Convert prefill caches (seq length = prefill_len) into decode caches:
+    full caches padded to max_len; windowed attention converted to the
+    ring-buffer layout with true slot positions."""
+    plan = plan_segments(cfg.layer_kinds())
+    out_segments = []
+    for seg_i, (period, repeats) in enumerate(plan):
+        seg = caches[seg_i]
+        new_blocks = []
+        for b_i, kind in enumerate(period):
+            w = _block_window(cfg, kind, window_override)
+            new_blocks.append(_prep_block_cache(
+                seg[b_i], prefill_len, max_len, w,
+                quant=(cfg.kv_cache_quant if kind[0] == "attn"
+                       and not cfg.use_mla else "")))
+        out_segments.append(tuple(new_blocks))
+    return tuple(out_segments)
+
+
+# ---------------------------------------------------------------------------
+# Apply
+# ---------------------------------------------------------------------------
+
+def _block_window(cfg, kind, window_override: Optional[int]):
+    mixer, _ = kind
+    if mixer != "attn":
+        return 0
+    if cfg.hybrid_period > 0:
+        return cfg.rglru.local_window
+    if window_override is not None:
+        return window_override
+    return cfg.sliding_window
+
+
+def decoder_apply(params, cfg: ModelConfig, x, *, mode: str, positions,
+                  caches=None, cache_pos=None, mask_kind: str = "causal",
+                  prefix_len=None, enc_out=None, enc_positions=None,
+                  rules=None, window_override: Optional[int] = None,
+                  return_cache: bool = False, use_rope: bool = True,
+                  remat: bool = True):
+    """x: (B,S,d) embeddings -> (hidden (B,S,d), new_caches, aux)."""
+    plan = plan_segments(cfg.layer_kinds())
+    aux_total = blocks.zero_aux()
+    new_caches_all = []
+
+    def apply_block(blk_params, kind, xx, blk_cache):
+        return blocks.apply(
+            blk_params, cfg, xx, kind, mode=mode, positions=positions,
+            cache=blk_cache, cache_pos=cache_pos, mask_kind=mask_kind,
+            window=_block_window(cfg, kind, window_override),
+            prefix_len=prefix_len, enc_out=enc_out,
+            enc_positions=enc_positions, rules=rules,
+            return_cache=return_cache, use_rope=use_rope)
+
+    for seg_i, (period, repeats) in enumerate(plan):
+        seg_params = params["segments"][seg_i]
+        seg_caches = caches[seg_i] if caches is not None else tuple(None for _ in period)
+
+        if repeats == 1:
+            new_seg_caches = []
+            for b_i, kind in enumerate(period):
+                x, nc, aux = apply_block(seg_params[b_i], kind, x, seg_caches[b_i])
+                new_seg_caches.append(nc)
+                aux_total = {k: aux_total[k] + aux[k] for k in aux_total}
+            new_caches_all.append(tuple(new_seg_caches))
+        elif cfg.force_unroll:
+            # probe mode: unroll the stacked segment so HLO cost analysis
+            # counts every layer (lax.scan bodies are counted once)
+            reps_caches = []
+            for r_i in range(repeats):
+                take = lambda t: jax.tree.map(lambda a: a[r_i], t)
+                blk_params = take(seg_params)
+                blk_caches = (take(seg_caches)
+                              if any(c is not None for c in seg_caches) else
+                              tuple(None for _ in period))
+                new_cs = []
+                for b_i, kind in enumerate(period):
+                    x, nc, aux = apply_block(blk_params[b_i], kind, x,
+                                             blk_caches[b_i])
+                    new_cs.append(nc)
+                    aux_total = {k: aux_total[k] + aux[k] for k in aux_total}
+                reps_caches.append(tuple(new_cs))
+            if any(any(c is not None for c in rc) for rc in reps_caches):
+                stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *reps_caches)
+            else:
+                stacked = reps_caches[0]
+            new_caches_all.append(stacked)
+        else:
+            def seg_body(carry, xs):
+                xx, aux_c = carry
+                blk_params_stack, blk_caches_stack = xs
+                new_cs = []
+                for b_i, kind in enumerate(period):
+                    cache_b = (blk_caches_stack[b_i]
+                               if blk_caches_stack is not None else None)
+                    xx, nc, aux = apply_block(blk_params_stack[b_i], kind, xx, cache_b)
+                    new_cs.append(nc)
+                    aux_c = {k: aux_c[k] + aux[k] for k in aux_c}
+                return (xx, aux_c), tuple(new_cs)
+
+            body = seg_body
+            if remat and mode == "train":
+                body = jax.checkpoint(seg_body)
+            xs = (seg_params, seg_caches if any(c is not None for c in seg_caches) else None)
+            (x, aux_total), seg_new_caches = jax.lax.scan(
+                body, (x, aux_total), xs)
+            new_caches_all.append(seg_new_caches)
+
+    x = norms.apply(params["final_norm"], cfg, x)
+    new_caches = tuple(new_caches_all) if return_cache or mode == "decode" else None
+    return x, new_caches, aux_total

@@ -1,0 +1,140 @@
+"""Serving engine: slot-based continuous batching over jit'd prefill/decode.
+
+A fixed number of batch slots share one decode computation; each slot has its
+own cache region and position (vector cache_pos).  Admission prefills a
+single request (B=1), converts its prefill cache to the decode layout, and
+inserts it into the batched caches at the slot's batch index — the standard
+continuous-batching dataflow, expressed with dynamic_update_slice_in_dim over
+the cache pytree (batch axis located via the cache shape specs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.tokenizer import EOS_ID, HashTokenizer, default_tokenizer
+from repro.models import transformer
+from repro.models.model_api import Model
+from repro.serving.requests import Request, Response
+from repro.serving.sampler import SamplerConfig, sample
+
+
+def _batch_axis(axes) -> int:
+    return axes.index("batch")
+
+
+class Engine:
+    def __init__(self, model: Model, params, *, max_len: int = 512,
+                 slots: int = 4, sampler: SamplerConfig = SamplerConfig(),
+                 window_override: Optional[int] = None,
+                 tokenizer: Optional[HashTokenizer] = None, seed: int = 0):
+        self.model = model
+        self.cfg = model.cfg
+        self.params = params
+        self.max_len = max_len
+        self.slots = slots
+        self.sampler = sampler
+        self.window_override = window_override
+        self.tokenizer = tokenizer or default_tokenizer()
+        self.key = jax.random.PRNGKey(seed)
+
+        self.caches = model.init_caches(slots, max_len,
+                                        window_override=window_override)
+        self._cache_specs = transformer.decoder_cache_shape_specs(
+            self.cfg, slots, max_len, self.cfg.cdtype,
+            cross=self.cfg.is_encoder_decoder,
+            enc_len=self.cfg.encoder_seq_len,
+            window_override=window_override)
+        self.slot_pos = np.zeros((slots,), np.int32)
+        self.slot_active = np.zeros((slots,), bool)
+        self.slot_req: List[Optional[Request]] = [None] * slots
+        self.slot_out: List[List[int]] = [[] for _ in range(slots)]
+        self.slot_tokens = np.zeros((slots,), np.int32)
+        self.stats = {"decode_steps": 0, "tokens_out": 0, "admitted": 0}
+
+        self._decode = jax.jit(
+            lambda p, t, c, pos: model.decode_step(
+                p, t, c, pos, window_override=window_override))
+        self._prefill = jax.jit(model.prefill)
+
+    # -- admission -----------------------------------------------------------
+    def _insert_cache(self, slot: int, single_caches):
+        def ins(full, single, spec):
+            ax = _batch_axis(spec[1])
+            return jax.lax.dynamic_update_slice_in_dim(
+                full, single.astype(full.dtype), slot, axis=ax)
+        self.caches = jax.tree.map(
+            ins, self.caches, single_caches, self._cache_specs,
+            is_leaf=lambda x: x is None)
+
+    def admit(self, req: Request) -> int:
+        free = np.where(~self.slot_active)[0]
+        assert free.size, "no free slot"
+        slot = int(free[0])
+        toks = req.prompt_tokens[: self.max_len - req.max_new_tokens - 1]
+        batch = {"tokens": jnp.asarray(toks, jnp.int32)[None]}
+        logits, pre_caches = self._prefill(self.params, batch)
+        single = self.model.prepare_decode_caches(
+            pre_caches, len(toks), self.max_len,
+            window_override=self.window_override)
+        self._insert_cache(slot, single)
+        self.key, sk = jax.random.split(self.key)
+        first = int(sample(logits, sk, self.sampler)[0])
+        self.slot_pos[slot] = len(toks)
+        self.slot_active[slot] = True
+        self.slot_req[slot] = req
+        self.slot_out[slot] = [first]
+        self.slot_tokens[slot] = first
+        self.stats["admitted"] += 1
+        return slot
+
+    @property
+    def has_free_slot(self) -> bool:
+        return bool((~self.slot_active).any())
+
+    # -- decode ----------------------------------------------------------------
+    def step(self) -> List[Response]:
+        """One batched decode step across all slots; returns finished
+        responses."""
+        if not self.slot_active.any():
+            return []
+        tokens = jnp.asarray(self.slot_tokens)[:, None]
+        pos = jnp.asarray(self.slot_pos)
+        logits, self.caches = self._decode(self.params, tokens, self.caches, pos)
+        self.key, sk = jax.random.split(self.key)
+        nxt = np.asarray(sample(logits, sk, self.sampler))
+        self.stats["decode_steps"] += 1
+
+        done: List[Response] = []
+        for s in range(self.slots):
+            if not self.slot_active[s]:
+                continue
+            self.slot_pos[s] += 1
+            tok = int(nxt[s])
+            self.slot_out[s].append(tok)
+            self.slot_tokens[s] = tok
+            self.stats["tokens_out"] += 1
+            req = self.slot_req[s]
+            eos = req.eos_id if req.eos_id is not None else EOS_ID
+            if (len(self.slot_out[s]) >= req.max_new_tokens
+                    or tok == eos
+                    or self.slot_pos[s] >= self.max_len - 1):
+                done.append(Response(req.request_id, list(self.slot_out[s]),
+                                     prompt_len=len(req.prompt_tokens)))
+                self.slot_active[s] = False
+                self.slot_req[s] = None
+                self.slot_out[s] = []
+        return done
+
+    # -- convenience -------------------------------------------------------------
+    def generate(self, prompts: List[str], max_new_tokens: int = 32) -> List[str]:
+        from repro.serving.scheduler import ContinuousBatcher
+        reqs = [Request(self.tokenizer.encode(p), max_new_tokens)
+                for p in prompts]
+        batcher = ContinuousBatcher(self)
+        out = batcher.run(reqs)
+        return [self.tokenizer.decode(out[r.request_id].tokens) for r in reqs]

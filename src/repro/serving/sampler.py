@@ -1,0 +1,26 @@
+"""Token samplers: greedy / temperature / top-k, all jit-safe."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    temperature: float = 0.0      # 0 => greedy
+    top_k: int = 0                # 0 => no truncation
+
+
+def sample(logits, key, cfg: SamplerConfig):
+    """logits: (B, 1, V) or (B, V) -> (B,) int32."""
+    if logits.ndim == 3:
+        logits = logits[:, -1]
+    if cfg.temperature <= 0.0:
+        return logits.argmax(-1).astype(jnp.int32)
+    logits = logits / cfg.temperature
+    if cfg.top_k > 0:
+        kth = jax.lax.top_k(logits, cfg.top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -1e30, logits)
+    return jax.random.categorical(key, logits).astype(jnp.int32)

@@ -1,0 +1,73 @@
+"""Training loop: jit'd (or pjit'd, via launch/train.py) train step with
+gradient accumulation and metrics."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model_api import Model
+from repro.training import optimizer as opt
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 100
+    log_every: int = 10
+    grad_accum: int = 1
+    opt: opt.OptimizerConfig = opt.OptimizerConfig()
+
+
+def make_train_step(model: Model, cfg: TrainConfig, rules=None):
+    def loss_fn(params, batch):
+        loss, metrics = model.train_loss(params, batch, rules=rules)
+        return loss, metrics
+
+    def train_step(params, opt_state, batch):
+        if cfg.grad_accum > 1:
+            def micro(carry, mb):
+                g_acc, m_acc = carry
+                (loss, metrics), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                m_acc = {k: m_acc.get(k, 0.0) + v for k, v in metrics.items()}
+                return (g_acc, m_acc), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, metrics), _ = jax.lax.scan(
+                micro, (zeros, {}), batch)     # batch: stacked microbatches
+            grads = jax.tree.map(lambda g: g / cfg.grad_accum, grads)
+            metrics = {k: v / cfg.grad_accum for k, v in metrics.items()}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        params2, opt_state2, om = opt.update(cfg.opt, params, grads, opt_state)
+        metrics.update(om)
+        return params2, opt_state2, metrics
+
+    return train_step
+
+
+def train(model: Model, params, data_iter: Iterator[Dict], cfg: TrainConfig,
+          log_fn: Optional[Callable[[int, Dict], None]] = None):
+    """Single-host training; returns (params, history)."""
+    opt_state = opt.init(cfg.opt, params)
+    step_fn = jax.jit(make_train_step(model, cfg))
+    history = []
+    t0 = time.time()
+    for step in range(cfg.steps):
+        batch = next(data_iter)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % cfg.log_every == 0 or step == cfg.steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = step
+            m["wall"] = time.time() - t0
+            history.append(m)
+            if log_fn:
+                log_fn(step, m)
+    return params, history

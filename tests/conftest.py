@@ -1,0 +1,11 @@
+import os
+import sys
+
+# never inherit the dry-run's 512-device flag into unit tests
+os.environ.pop("XLA_FLAGS", None)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,148 @@
+"""Unit + integration tests for the Memori core (the paper's contribution)."""
+import time
+
+import pytest
+
+from repro.core import (AdvancedAugmentation, MemoriClient, MemoriMemory,
+                        Message, RuleExtractor, Triple, TripleStore)
+from repro.core.baselines import FullContextMemory, RagChunkMemory
+from repro.core.budget import TokenBudgeter
+from repro.core.embedder import HashEmbedder
+from repro.core.summaries import SummaryStore
+from repro.data.tokenizer import default_tokenizer
+
+EMB = HashEmbedder()
+
+
+def _mem(**kw):
+    kw.setdefault("use_kernel", False)   # pure-jnp search: fast on CPU
+    return MemoriMemory(EMB, **kw)
+
+
+def _session(texts, speaker="Caroline", ts=1700000000.0):
+    return [Message(speaker, t, ts) for t in texts]
+
+
+# -- extraction --------------------------------------------------------------
+
+def test_rule_extractor_finds_planted_facts():
+    ex = RuleExtractor()
+    msgs = _session([
+        "My favorite food is sushi.",
+        "I work as a teacher.",
+        "I adopted a puppy named Max.",
+        "I used to work as a nurse, but now I am a chef.",
+        "The weather is nice today.",
+    ])
+    triples, summary = ex.extract("c", "s0", msgs)
+    texts = {t.text() for t in triples}
+    assert "Caroline favorite food sushi" in texts
+    assert "Caroline works as teacher" in texts
+    assert "Caroline adopted puppy" in texts
+    assert "puppy is named max" in texts
+    assert "Caroline used to work as nurse" in texts
+    assert "Caroline works as chef" in texts
+    assert "summary" not in summary.text.lower() or summary.text
+    assert "Caroline" in summary.text
+
+
+def test_extractor_skips_pure_noise():
+    ex = RuleExtractor()
+    triples, _ = ex.extract("c", "s0", _session([
+        "How have you been lately?",
+        "The weather here has been so strange.",
+        "Anyway, enough about that.",
+    ]))
+    assert triples == []
+
+
+def test_triple_store_latest_for_key():
+    store = TripleStore()
+    store.add(Triple("a", "works as", "nurse", timestamp=1.0))
+    store.add(Triple("a", "works as", "chef", timestamp=2.0))
+    latest = store.latest_for_key("a|works as")
+    assert latest.object == "chef"
+
+
+# -- pipeline / retrieval ------------------------------------------------------
+
+def test_augmentation_aligns_indices():
+    aug = AdvancedAugmentation(EMB, use_kernel=False)
+    aug.ingest("c", "s0", _session(["I love chess.", "I live in Lisbon."]))
+    aug.ingest("c", "s1", _session(["My favorite color is teal."]))
+    st = aug.stats()
+    assert st["triples"] == st["bank_rows"] == len(aug.bm25)
+    assert st["summaries"] == 2
+
+
+def test_retrieval_surfaces_relevant_triple_with_summary():
+    mem = _mem()
+    mem.record_session("c", "s0", _session(["I love chess.",
+                                            "I live in Lisbon."]))
+    mem.record_session("c", "s1", _session(["I adopted a kitten named Luna."]))
+    ctx = mem.retrieve("Which city does Caroline live in?")
+    assert any(t.object == "lisbon" for t in ctx.triples)
+    assert ctx.summaries, "linked session summary must ride along"
+    assert ctx.token_count <= mem.budgeter.budget
+
+
+def test_retrieval_empty_memory_is_safe():
+    mem = _mem()
+    ctx = mem.retrieve("anything at all?")
+    assert ctx.triples == [] and ctx.token_count >= 0
+
+
+# -- budget ---------------------------------------------------------------------
+
+def test_budgeter_never_exceeds_budget():
+    tok = default_tokenizer()
+    summaries = SummaryStore()
+    budgeter = TokenBudgeter(budget=40, tokenizer=tok)
+    cands = [(Triple("s", f"pred{i}", f"object number {i}",
+                     conversation_id="c", session_id=f"s{i}",
+                     timestamp=float(i)), 1.0 / (i + 1)) for i in range(50)]
+    ctx = budgeter.select(cands, summaries)
+    assert ctx.token_count <= 40
+    assert len(ctx.triples) >= 1
+
+
+# -- SDK -------------------------------------------------------------------------
+
+def test_sdk_round_trip_injects_memory():
+    mem = _mem()
+    seen_prompts = []
+
+    def llm(prompt):
+        seen_prompts.append(prompt)
+        return "ok"
+
+    client = MemoriClient(llm, mem)
+    client.chat("My favorite food is ramen.", timestamp=time.time())
+    client.end_session()
+    client.chat("Do you remember my favorite food?")
+    assert "ramen" in seen_prompts[-1].lower(), \
+        "retrieved triple must be injected into the LLM prompt"
+    assert client.context_tokens("favorite food?") < 200
+
+
+# -- baselines --------------------------------------------------------------------
+
+def test_full_context_grows_but_memori_stays_bounded():
+    mem = _mem(budget=300)
+    full = FullContextMemory()
+    for s in range(6):
+        msgs = _session([f"I bought a telescope number {s}.",
+                         "Nothing else happened today."] * 10, ts=1e9 + s)
+        mem.record_session("c", f"s{s}", msgs)
+        full.record_session("c", f"s{s}", msgs)
+    q = "What did Caroline buy?"
+    assert full.retrieve(q).token_count > 4 * mem.retrieve(q).token_count
+
+
+def test_rag_chunker_chunks_by_token_budget():
+    rag = RagChunkMemory(EMB, chunk_tokens=30, top_k=2, use_kernel=False)
+    rag.record_session("c", "s0", _session([f"sentence number {i} is here."
+                                            for i in range(40)]))
+    ctx = rag.retrieve("sentence number 7")
+    assert ctx.token_count > 0
+    assert len(rag._chunks) > 5

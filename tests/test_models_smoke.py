@@ -1,0 +1,71 @@
+"""Mandated per-architecture smoke tests: a REDUCED variant of each assigned
+family (≤2 layers, d_model≤512, ≤4 experts) runs one forward/train step on
+CPU; output shapes + finiteness asserted."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.models.model_api import Model
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _reduced(arch):
+    cfg = get_config(arch).reduced()
+    if cfg.use_moe:
+        # drop-free routing for deterministic smoke numbers
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=4.0))
+    return cfg
+
+
+def _batch(cfg, B=2, S=24):
+    batch = {"tokens": jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)}
+    if cfg.num_image_tokens:
+        batch["images"] = jax.random.normal(KEY, (B, cfg.num_image_tokens, 1152))
+    if cfg.is_encoder_decoder:
+        batch["audio"] = jax.random.normal(KEY, (B, cfg.encoder_seq_len,
+                                                 cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_reduced_config_limits(arch):
+    cfg = _reduced(arch)
+    assert cfg.num_layers <= 2
+    assert cfg.d_model <= 512
+    if cfg.use_moe:
+        assert cfg.moe.num_experts <= 4
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_forward_and_train_step(arch):
+    cfg = _reduced(arch)
+    model = Model(cfg)
+    params = model.init_params(KEY)
+    batch = _batch(cfg)
+
+    loss, metrics = jax.jit(model.train_loss)(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{arch}: non-finite loss"
+    assert 0.0 <= float(metrics["accuracy"]) <= 1.0
+
+    grads = jax.grad(lambda p: model.train_loss(p, batch)[0])(params)
+    leaves = jax.tree.leaves(grads)
+    assert leaves and all(bool(jnp.isfinite(g).all()) for g in leaves), \
+        f"{arch}: non-finite grads"
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_prefill_logits_shape(arch):
+    cfg = _reduced(arch)
+    model = Model(cfg)
+    params = model.init_params(KEY)
+    batch = _batch(cfg, B=2, S=16)
+    logits, caches = jax.jit(model.prefill)(params, batch)
+    assert logits.shape == (2, 1, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    assert caches is not None

@@ -1,0 +1,155 @@
+"""Hypothesis property-based tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bm25 import BM25Index
+from repro.core.budget import TokenBudgeter
+from repro.core.hybrid import rrf_fuse
+from repro.core.summaries import SummaryStore
+from repro.core.triples import Triple
+from repro.data.tokenizer import HashTokenizer
+from repro.kernels import ref
+from repro.models.config import plan_segments
+
+WORDS = st.text(alphabet="abcdefghij ", min_size=1, max_size=40)
+
+
+# -- tokenizer -----------------------------------------------------------------
+
+@given(WORDS)
+@settings(max_examples=60, deadline=None)
+def test_tokenizer_deterministic_and_bounded(text):
+    t1, t2 = HashTokenizer(1024), HashTokenizer(1024)
+    a, b = t1.encode(text), t2.encode(text)
+    assert a == b
+    assert all(0 <= i < 1024 for i in a)
+    assert t1.count(text) == len(a)
+
+
+@given(WORDS)
+@settings(max_examples=30, deadline=None)
+def test_tokenizer_decode_roundtrip_words(text):
+    tok = HashTokenizer(1 << 20)          # big vocab: no collisions expected
+    ids = tok.encode(text)
+    assert tok.decode(ids) == " ".join(w.lower() for w in tok.words(text))
+
+
+# -- top-k exactness ------------------------------------------------------------
+
+@given(st.integers(1, 6), st.integers(2, 40), st.integers(2, 16),
+       st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_topk_ref_is_exact(q_n, bank_n, dim, seed):
+    key = jax.random.PRNGKey(seed)
+    q = jax.random.normal(key, (q_n, dim))
+    bank = jax.random.normal(jax.random.fold_in(key, 1), (bank_n, dim))
+    kk = min(5, bank_n)
+    s, i = ref.topk_mips_ref(q, bank, k=kk)
+    dots = np.asarray(q) @ np.asarray(bank).T
+    for r in range(q_n):
+        want = set(np.argsort(-dots[r], kind="stable")[:kk].tolist())
+        assert set(np.asarray(i)[r].tolist()) == want
+
+
+# -- BM25 vs dict oracle ----------------------------------------------------------
+
+def _bm25_oracle(docs, query_terms, k1=1.5, b=0.75):
+    import math
+    N = len(docs)
+    avg = sum(max(1, len(d)) for d in docs) / N
+    df = {}
+    for d in docs:
+        for t in set(d):
+            df[t] = df.get(t, 0) + 1
+    out = []
+    for d in docs:
+        s = 0.0
+        for t in set(query_terms):
+            if t not in df:
+                continue
+            tf = d.count(t)
+            idf = math.log(1.0 + (N - df[t] + 0.5) / (df[t] + 0.5))
+            s += idf * tf * (k1 + 1) / (tf + k1 * (1 - b + b * max(1, len(d)) / avg))
+    # note: oracle returns scores in doc order
+        out.append(s)
+    return out
+
+
+@given(st.lists(st.lists(st.sampled_from("abcdefg"), min_size=1, max_size=8),
+                min_size=2, max_size=10),
+       st.lists(st.sampled_from("abcdefg"), min_size=1, max_size=4))
+@settings(max_examples=25, deadline=None)
+def test_bm25_matches_dict_oracle(docs, query):
+    idx = BM25Index()
+    idx.add([" ".join(d) for d in docs])
+    got = np.asarray(idx.scores(" ".join(query)))
+    want = np.asarray(_bm25_oracle(docs, query))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+# -- RRF fusion --------------------------------------------------------------------
+
+@given(st.lists(st.integers(0, 30), min_size=1, max_size=20, unique=True),
+       st.lists(st.integers(0, 30), min_size=1, max_size=20, unique=True))
+@settings(max_examples=40, deadline=None)
+def test_rrf_front_of_both_lists_wins(r1, r2):
+    fused = rrf_fuse([r1, r2])
+    ids = [d for d, _ in fused]
+    assert set(ids) == set(r1) | set(r2)
+    # an item first in BOTH rankings must be ranked first overall
+    if r1 and r2 and r1[0] == r2[0]:
+        assert ids[0] == r1[0]
+    # scores descending
+    scores = [s for _, s in fused]
+    assert all(a >= b for a, b in zip(scores, scores[1:]))
+
+
+# -- budget invariant ----------------------------------------------------------------
+
+@given(st.integers(10, 200), st.integers(1, 40))
+@settings(max_examples=25, deadline=None)
+def test_budget_never_exceeded(budget, n):
+    tok = HashTokenizer(4096)
+    budgeter = TokenBudgeter(budget=budget, tokenizer=tok)
+    cands = [(Triple("subj", "pred", f"object {i} with several words",
+                     conversation_id="c", session_id=f"s{i % 3}",
+                     timestamp=float(i)), float(n - i)) for i in range(n)]
+    ctx = budgeter.select(cands, SummaryStore())
+    assert ctx.token_count <= budget
+
+
+# -- layer planner -------------------------------------------------------------------
+
+@given(st.lists(st.sampled_from([("attn", "mlp"), ("rglru", "mlp"),
+                                 ("ssm", "none"), ("attn", "moe")]),
+                min_size=1, max_size=80))
+@settings(max_examples=50, deadline=None)
+def test_plan_segments_partitions_exactly(kinds):
+    kinds = tuple(kinds)
+    segs = plan_segments(kinds)
+    rebuilt = []
+    for period, repeats in segs:
+        rebuilt.extend(list(period) * repeats)
+    assert tuple(rebuilt) == kinds
+
+
+# -- optimizer sanity ------------------------------------------------------------------
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_adamw_descends_on_quadratic(seed):
+    from repro.training import optimizer as opt
+    key = jax.random.PRNGKey(seed)
+    target = jax.random.normal(key, (8,))
+    params = {"w": jnp.zeros((8,))}
+    cfg = opt.OptimizerConfig(peak_lr=0.05, warmup_steps=1, total_steps=60,
+                              weight_decay=0.0)
+    state = opt.init(cfg, params)
+    loss = lambda p: jnp.sum((p["w"] - target) ** 2)
+    l0 = float(loss(params))
+    for _ in range(60):
+        g = jax.grad(loss)(params)
+        params, state, _ = opt.update(cfg, params, g, state)
+    assert float(loss(params)) < 0.5 * l0
