@@ -4,11 +4,12 @@ from __future__ import annotations
 
 def main() -> None:
     from benchmarks import (fig2_variance, retrieval_microbench,
-                            roofline_report, table1_accuracy, table2_tokens,
-                            table3_categories)
+                            roofline_report, service_throughput,
+                            table1_accuracy, table2_tokens, table3_categories)
     rows = []
     for mod in (table1_accuracy, table2_tokens, table3_categories,
-                fig2_variance, retrieval_microbench, roofline_report):
+                fig2_variance, retrieval_microbench, service_throughput,
+                roofline_report):
         rows = mod.run(rows)
     print("\nname,us_per_call,derived")
     for name, us, derived in rows:

@@ -1,0 +1,89 @@
+"""Multi-tenant retrieval throughput: batched vs sequential (the tentpole
+metric of the MemoryService).  N tenants each hold a few ingested sessions
+in one packed bank; a batch of per-tenant queries is answered either as N
+sequential `retrieve` calls (N embed calls + N top-k launches) or as ONE
+`retrieve_batch` (one embed call + one namespace-masked topk_mips launch).
+
+Wall-clock here is CPU (kernel off by default — Pallas interpret mode would
+time the emulator, not the algorithm); on TPU the batched path additionally
+amortizes kernel launch + HBM bank streaming across the whole batch.
+
+    PYTHONPATH=src python benchmarks/service_throughput.py [--kernel]
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core.extraction import Message
+from repro.core.service import MemoryService
+from repro.core.embedder import HashEmbedder
+
+BATCH_SIZES = (1, 8, 32)
+N_TENANTS = 32
+SESSIONS_PER_TENANT = 3
+
+FACTS = [
+    "I work as a {job} and I live in {city}.",
+    "I adopted a {pet} named {name}.",
+    "My favorite color is {color}.",
+]
+JOBS = ["botanist", "welder", "pilot", "baker", "cartographer", "luthier"]
+CITIES = ["tallinn", "porto", "cusco", "sapporo", "tromso", "windhoek"]
+PETS = ["hedgehog", "parrot", "gecko", "ferret", "axolotl", "magpie"]
+NAMES = ["biscuit", "olive", "comet", "pickle", "juniper", "maple"]
+COLORS = ["indigo", "ochre", "teal", "crimson", "sage", "amber"]
+
+
+def _build_service(use_kernel: bool) -> MemoryService:
+    svc = MemoryService(HashEmbedder(), budget=800, use_kernel=use_kernel)
+    for u in range(N_TENANTS):
+        ns = f"user{u}/c0"
+        for s in range(SESSIONS_PER_TENANT):
+            texts = [f.format(job=JOBS[(u + s) % len(JOBS)],
+                              city=CITIES[(u + s) % len(CITIES)],
+                              pet=PETS[(u + s) % len(PETS)],
+                              name=NAMES[(u + s) % len(NAMES)],
+                              color=COLORS[(u + s) % len(COLORS)])
+                     for f in FACTS]
+            msgs = [Message(f"user{u}", t, 1700000000.0 + s) for t in texts]
+            svc.record(ns, f"s{s}", msgs)
+    return svc
+
+
+def _time(fn, iters: int = 5) -> float:
+    fn()                       # warmup (jit caches, lazy arrays)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters
+
+
+def run(csv_rows, use_kernel: bool = False):
+    print("\n# MemoryService throughput — batched vs sequential retrieval"
+          + (" [pallas kernel]" if use_kernel else " [jnp ref path]"))
+    svc = _build_service(use_kernel)
+    queries = [(f"user{u}/c0", f"Which city does user{u} live in?")
+               for u in range(N_TENANTS)]
+    for B in BATCH_SIZES:
+        batch = queries[:B]
+        t_seq = _time(lambda: [svc.retrieve(ns, q) for ns, q in batch])
+        t_bat = _time(lambda: svc.retrieve_batch(batch))
+        speedup = t_seq / t_bat
+        qps_seq = B / t_seq
+        qps_bat = B / t_bat
+        print(f"batch {B:3d}: sequential {t_seq*1e3:8.1f}ms ({qps_seq:7.1f} q/s)"
+              f" | batched {t_bat*1e3:8.1f}ms ({qps_bat:7.1f} q/s)"
+              f" | speedup {speedup:5.2f}x")
+        csv_rows.append((f"service/batch{B}", t_bat * 1e6,
+                         f"{speedup:.2f}x vs sequential"))
+    return csv_rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--kernel", action="store_true",
+                    help="route dense search through the Pallas kernel "
+                         "(interpret mode off-TPU: slow, for parity checks)")
+    args = ap.parse_args()
+    run([], use_kernel=args.kernel)

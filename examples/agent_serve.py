@@ -2,19 +2,22 @@
 
     PYTHONPATH=src python examples/agent_serve.py
 
-A small LM is served with continuous batching behind the MemoriClient SDK;
-every chat turn retrieves structured memory, injects it into the prompt, and
-records the exchange back through Advanced Augmentation.  The LM is
-random-init (this box trains ~minutes, not the hours a useful chat model
-needs) — the demo shows the *system*: interception, retrieval, token
-accounting, batched decode.
+A small LM is served with continuous batching behind the MemoriClient SDK,
+fronted by the multi-tenant MemoryService: every user gets an isolated
+namespace in one shared packed bank, chat turns retrieve structured memory
+and record the exchange back through Advanced Augmentation, and the pending
+queries of *all* tenants are answered in one batched retrieval (one embed
+call + one namespace-masked topk_mips launch).  The LM is random-init (this
+box trains ~minutes, not the hours a useful chat model needs) — the demo
+shows the *system*: interception, retrieval, isolation, token accounting,
+batched decode.
 """
 import time
 
 import jax
 
 from repro.configs import get_config
-from repro.core import MemoriClient, MemoriMemory, Message
+from repro.core import MemoriClient, MemoryService
 from repro.core.embedder import HashEmbedder
 from repro.data.tokenizer import HashTokenizer
 from repro.models.model_api import Model
@@ -34,28 +37,36 @@ def main():
     def llm(prompt: str) -> str:
         return engine.generate([prompt[-600:]], max_new_tokens=16)[0]
 
-    memory = MemoriMemory(HashEmbedder(), budget=800, use_kernel=False)
-    client = MemoriClient(llm, memory, user_name="Priya")
+    service = MemoryService(HashEmbedder(), budget=800, use_kernel=False)
+    users = {
+        "priya/c0": ("Priya", [
+            "Hi there! I am Priya.",
+            "I work as a botanist and I live in Tallinn.",
+            "My favorite color is indigo.",
+            "I adopted a hedgehog named Biscuit.",
+        ]),
+        "marco/c0": ("Marco", [
+            "Hello, Marco here.",
+            "I work as a glassblower and I live in Porto.",
+            "I adopted a parrot named Olive.",
+        ]),
+    }
+    for ns, (name, turns) in users.items():
+        client = MemoriClient(llm, service.namespace(ns), user_name=name)
+        for t in turns:
+            reply = client.chat(t, timestamp=time.time())
+            print(f"{name}: {t}\n  agent: {reply[:60]}")
+        client.end_session()
 
-    turns = [
-        "Hi there! I am Priya.",
-        "I work as a botanist and I live in Tallinn.",
-        "My favorite color is indigo.",
-        "I adopted a hedgehog named Biscuit.",
-    ]
-    for t in turns:
-        reply = client.chat(t, timestamp=time.time())
-        print(f"Priya: {t}\n  agent: {reply[:60]}")
-    client.end_session()
-
-    print("\nmemory after session:", memory.stats())
-    for q in ["What is the name of Priya's hedgehog?",
-              "Which city does Priya live in?"]:
-        ctx = memory.retrieve(q)
-        print(f"\nQ: {q}  ({ctx.token_count} tokens injected)")
+    print("\nservice after sessions:", service.stats())
+    # the cross-tenant hot path: both tenants' queries in ONE batched call
+    batch = [("priya/c0", "What is the name of Priya's pet?"),
+             ("marco/c0", "What is the name of Marco's pet?")]
+    for (ns, q), ctx in zip(batch, service.retrieve_batch(batch)):
+        print(f"\n[{ns}] Q: {q}  ({ctx.token_count} tokens injected)")
         for t in ctx.triples[:3]:
             print(f"   {t.render()}")
-        print(f"   engine stats: {engine.stats}")
+    print(f"\nengine stats: {engine.stats}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# CI entry point: fast signal first, then the tier-1 gate.
+#
+#   scripts/ci.sh            # fast pass (-m "not slow") + full tier-1 suite
+#   FAST_ONLY=1 scripts/ci.sh  # just the fast pass (pre-push hook friendly)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+echo "== fast pass: pytest -m 'not slow' =="
+python -m pytest -q -m "not slow"
+
+if [[ "${FAST_ONLY:-0}" != "1" ]]; then
+    echo "== tier-1: pytest -x -q (full suite) =="
+    python -m pytest -x -q
+fi

@@ -5,5 +5,6 @@ from repro.core.augmentation import AdvancedAugmentation  # noqa: F401
 from repro.core.extraction import LMExtractor, Message, RuleExtractor  # noqa: F401
 from repro.core.memory import ANSWER_PROMPT, MemoriMemory, RetrievedContext  # noqa: F401
 from repro.core.sdk import MemoriClient  # noqa: F401
+from repro.core.service import MemoryService, NamespaceView  # noqa: F401
 from repro.core.summaries import Summary, SummaryStore  # noqa: F401
 from repro.core.triples import Triple, TripleStore  # noqa: F401

@@ -6,10 +6,17 @@ rows, so scoring a query against the whole bank is a dense vectorised
 comparison:  tf(t, d) = sum_j [doc_ids[d, j] == t].  Ranking semantics match
 textbook BM25 up to hash collisions (property-tested against a dict-based
 oracle in tests/).
+
+Multi-tenant extension: documents may carry a namespace tag, and scoring can
+be scoped to one namespace — df, N, and avg_len are then computed over that
+namespace's live documents only, so a scoped query ranks exactly as it would
+against an isolated per-tenant index.  `remove(ids)` tombstones documents
+(ids keep their slots — the tid==doc-id alignment with the triple store and
+vector bank survives — but dead docs never score or surface again).
 """
 from __future__ import annotations
 
-from typing import List, Sequence
+from typing import List, Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
@@ -26,12 +33,15 @@ class BM25Index:
         self.tokenizer = tokenizer or default_tokenizer()
         self._doc_rows: List[np.ndarray] = []
         self._doc_lens: List[int] = []
-        self._df: dict[int, int] = {}
+        self._doc_ns: List[int] = []          # -1 == untagged/default
+        self._alive: List[bool] = []
         self._dirty = True
         self._docs_arr = None
         self._lens_arr = None
 
-    def add(self, texts: Sequence[str]) -> List[int]:
+    def add(self, texts: Sequence[str],
+            namespace: Optional[int] = None) -> List[int]:
+        ns = -1 if namespace is None else int(namespace)
         ids = []
         for t in texts:
             tok = self.tokenizer.encode(t)[: self.max_doc_len]
@@ -39,14 +49,28 @@ class BM25Index:
             row[: len(tok)] = tok
             self._doc_rows.append(row)
             self._doc_lens.append(max(1, len(tok)))
-            for term in set(tok):
-                self._df[term] = self._df.get(term, 0) + 1
+            self._doc_ns.append(ns)
+            self._alive.append(True)
             ids.append(len(self._doc_rows) - 1)
         self._dirty = True
         return ids
 
+    def remove(self, ids: Sequence[int]) -> int:
+        """Tombstone documents by id.  Returns #newly removed."""
+        n = 0
+        for i in ids:
+            i = int(i)
+            if 0 <= i < len(self._doc_rows) and self._alive[i]:
+                self._alive[i] = False
+                n += 1
+        return n
+
     def __len__(self):
         return len(self._doc_rows)
+
+    @property
+    def alive_count(self) -> int:
+        return int(sum(self._alive))
 
     def _arrays(self):
         if self._dirty:
@@ -57,31 +81,54 @@ class BM25Index:
             self._dirty = False
         return self._docs_arr, self._lens_arr
 
-    def scores(self, query: str) -> jnp.ndarray:
-        """BM25 scores over all docs -> (N,) f32 (empty -> (0,))."""
+    def _selection(self, namespace: Optional[int]) -> np.ndarray:
+        """(N,) bool: live docs, restricted to `namespace` when given."""
+        sel = np.asarray(self._alive, bool)
+        if namespace is not None:
+            sel = sel & (np.asarray(self._doc_ns, np.int32) == int(namespace))
+        return sel
+
+    def scores(self, query: str, namespace: Optional[int] = None) -> jnp.ndarray:
+        """BM25 scores over all docs -> (N,) f32 (empty -> (0,)).  Docs
+        outside the selection (dead, or other namespaces when `namespace` is
+        given) score 0; corpus statistics (N, df, avg_len) come from the
+        selection only, so scoped scores equal an isolated index's."""
+        return self._scores_sel(query, self._selection(namespace))
+
+    def _scores_sel(self, query: str, sel_np: np.ndarray) -> jnp.ndarray:
         docs, lens = self._arrays()
         N = docs.shape[0]
         if N == 0:
             return jnp.zeros((0,), jnp.float32)
+        n_sel = int(sel_np.sum())
         terms = list(dict.fromkeys(self.tokenizer.encode(query)))
-        if not terms:
+        if n_sel == 0 or not terms:
             return jnp.zeros((N,), jnp.float32)
-        avg_len = float(np.mean(self._doc_lens))
-        out = jnp.zeros((N,), jnp.float32)
+        lens_np = np.asarray(self._doc_lens, np.float32)
+        avg_len = float(lens_np[sel_np].mean())
+        sel = jnp.asarray(sel_np)
         norm = self.k1 * (1.0 - self.b + self.b * lens / avg_len)
-        for t in terms:
-            df = self._df.get(t, 0)
-            if df == 0:
-                continue
-            idf = float(np.log(1.0 + (N - df + 0.5) / (df + 0.5)))
-            tf = (docs == t).sum(axis=1).astype(jnp.float32)
-            out = out + idf * tf * (self.k1 + 1.0) / (tf + norm)
-        return out
+        # per-term tf columns dispatch lazily (no host sync); stacking to
+        # (N, T) keeps peak memory at N*T instead of an N*L*T broadcast,
+        # and the df pull below is the single device sync per query
+        tf = jnp.stack([(docs == t).sum(axis=1).astype(jnp.float32)
+                        for t in terms], axis=1)                    # (N, T)
+        df = np.asarray(((tf > 0) & sel[:, None]).sum(axis=0),
+                        np.float32)                                 # (T,)
+        idf = np.where(df > 0,
+                       np.log(1.0 + (n_sel - df + 0.5) / (df + 0.5)), 0.0)
+        out = (jnp.asarray(idf)[None, :] * tf * (self.k1 + 1.0)
+               / (tf + norm[:, None])).sum(axis=1)
+        return jnp.where(sel, out, 0.0)
 
-    def topk(self, query: str, k: int):
-        s = self.scores(query)
-        if s.shape[0] == 0:
+    def topk(self, query: str, k: int, namespace: Optional[int] = None):
+        """Top-k (scores, global doc ids), restricted to the selection."""
+        sel = self._selection(namespace) if len(self._doc_rows) else \
+            np.zeros((0,), bool)
+        cand = np.where(sel)[0]
+        if cand.size == 0:
             return np.zeros((0,), np.float32), np.zeros((0,), np.int64)
-        k = min(k, s.shape[0])
-        idx = np.argsort(-np.asarray(s), kind="stable")[:k]
-        return np.asarray(s)[idx], idx
+        s = np.asarray(self._scores_sel(query, sel))[cand]
+        k = min(k, cand.size)
+        order = np.argsort(-s, kind="stable")[:k]
+        return s[order], cand[order]

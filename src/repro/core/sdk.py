@@ -1,21 +1,34 @@
 """Memori SDK — the client wrapper (paper Fig. 1): wraps any LLM callable,
 intercepts chat requests, injects retrieved memory as context, and records
 the exchange back into memory.  LLM-agnostic by construction: `llm_fn` is
-just `prompt -> str` (a repro.serving engine, or anything else)."""
+just `prompt -> str` (a repro.serving engine, or anything else).
+
+`memory` is anything with the MemoriMemory read/write surface
+(answer_prompt / retrieve / record_session): a standalone MemoriMemory, or —
+the production shape — a MemoryService namespace view
+(`service.namespace("user/conv")`), so many clients share one packed bank
+and the batched retrieval path."""
 from __future__ import annotations
 
 import itertools
 import time
-from typing import Callable, Optional
+from typing import Callable, Optional, Protocol, Tuple
 
 from repro.core.extraction import Message
-from repro.core.memory import ANSWER_PROMPT, MemoriMemory
+from repro.core.memory import ANSWER_PROMPT, RetrievedContext
 
 _session_counter = itertools.count()
 
 
+class MemoryLike(Protocol):
+    def answer_prompt(self, question: str) -> Tuple[str, RetrievedContext]: ...
+    def retrieve(self, query: str, top_k=None) -> RetrievedContext: ...
+    def record_session(self, conversation_id: str, session_id: str,
+                       messages) -> object: ...
+
+
 class MemoriClient:
-    def __init__(self, llm_fn: Callable[[str], str], memory: MemoriMemory,
+    def __init__(self, llm_fn: Callable[[str], str], memory: MemoryLike,
                  user_name: str = "user", agent_name: str = "assistant"):
         self.llm = llm_fn
         self.memory = memory

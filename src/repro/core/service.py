@@ -1,0 +1,242 @@
+"""MemoryService — the multi-tenant memory layer (ROADMAP north-star).
+
+MemoriMemory is single-tenant: one object, one bank, one kernel launch per
+query.  A production deployment serves millions of (user, conversation)
+namespaces, and the amortization that makes that affordable on TPU is
+*batching*: pending queries across tenants are embedded in ONE
+`embed_texts` call and scored in ONE namespace-masked `topk_mips` launch
+against a packed multi-tenant bank (per-row namespace ids; cross-namespace
+hits masked to NEG_INF before the top-k merge — kernels/topk_mips.py).
+
+Isolation invariants:
+  * a triple recorded under namespace A can never surface for namespace B
+    (dense path: kernel mask; sparse path: BM25 per-namespace scoping);
+  * `retrieve_batch([(ns, q), ...])` returns results identical to the same
+    retrieves issued sequentially (asserted in tests/test_service.py);
+  * tombstoned rows (evict / evict_superseded) never surface again, and
+    their vectors are physically zeroed.
+
+`namespace(name)` returns a MemoriMemory-compatible view, so MemoriClient
+and the serving launchers run against the service unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.core.bm25 import BM25Index
+from repro.core.budget import TokenBudgeter
+from repro.core.extraction import Extractor, Message, RuleExtractor
+from repro.core.hybrid import rrf_fuse
+from repro.core.memory import ANSWER_PROMPT, MemoriMemory, RetrievedContext
+from repro.core.summaries import Summary, SummaryStore
+from repro.core.triples import Triple, TripleStore
+from repro.core.vector_index import VectorIndex
+from repro.data.tokenizer import HashTokenizer, default_tokenizer
+
+
+@dataclasses.dataclass
+class _Tenant:
+    """Per-namespace state.  Bank rows and BM25 doc ids share one global id
+    space (row == doc id); `rows[local_tid] -> global row` maps back."""
+    ns_id: int
+    triples: TripleStore = dataclasses.field(default_factory=TripleStore)
+    summaries: SummaryStore = dataclasses.field(default_factory=SummaryStore)
+    rows: List[int] = dataclasses.field(default_factory=list)
+    evicted: Set[int] = dataclasses.field(default_factory=set)  # local tids
+
+
+class MemoryService:
+    def __init__(self, embedder, extractor: Optional[Extractor] = None,
+                 dim: int = 256, budget: int = 1300, top_k: int = 10,
+                 tokenizer: HashTokenizer | None = None,
+                 use_kernel: bool = True,
+                 dense_weight: float = 1.0, sparse_weight: float = 0.7,
+                 pool: int = 64):
+        self.embedder = embedder
+        self.extractor = extractor or RuleExtractor()
+        self.tokenizer = tokenizer or default_tokenizer()
+        self.budgeter = TokenBudgeter(budget=budget, tokenizer=self.tokenizer)
+        self.top_k = top_k
+        self.dense_weight = dense_weight
+        self.sparse_weight = sparse_weight
+        self.pool = pool
+        self.vindex = VectorIndex(dim=dim, use_kernel=use_kernel)
+        self.bm25 = BM25Index(tokenizer=self.tokenizer)
+        self._tenants: Dict[str, _Tenant] = {}
+        self._ns_ids: Dict[str, int] = {}      # survives evict(): tombstoned
+        #                                        rows keep a retired ns id
+        self._row_ns: List[int] = []           # global row -> namespace id
+        self._row_tid: List[int] = []          # global row -> local tid
+
+    # -- tenancy -----------------------------------------------------------
+    def _tenant(self, namespace: str) -> _Tenant:
+        t = self._tenants.get(namespace)
+        if t is None:
+            ns_id = self._ns_ids.setdefault(namespace, len(self._ns_ids))
+            t = self._tenants[namespace] = _Tenant(ns_id=ns_id)
+        return t
+
+    def namespaces(self) -> List[str]:
+        return list(self._tenants)
+
+    def namespace(self, name: str) -> "NamespaceView":
+        return NamespaceView(self, name)
+
+    # -- write path ----------------------------------------------------------
+    def record(self, namespace: str, session_id: str,
+               messages: Sequence[Message]) -> Tuple[List[Triple], Summary]:
+        """Ingest one session for one tenant: extract triples + summary,
+        embed in one call, append to the packed bank / scoped BM25."""
+        t = self._tenant(namespace)
+        triples, summary = self.extractor.extract(namespace, session_id,
+                                                  messages)
+        t.summaries.add(summary)
+        if triples:
+            texts = [tr.text() for tr in triples]
+            vecs = self.embedder.embed_texts(texts)
+            rows = self.vindex.add(vecs)
+            bids = self.bm25.add(texts, namespace=t.ns_id)
+            for tr, row, bid in zip(triples, rows, bids):
+                tid = t.triples.add(tr)
+                # global row, BM25 doc id and row-table slots stay aligned
+                assert int(row) == int(bid) == len(self._row_ns)
+                t.rows.append(int(row))
+                self._row_ns.append(t.ns_id)
+                self._row_tid.append(tid)
+        return triples, summary
+
+    # -- read path -------------------------------------------------------------
+    def retrieve(self, namespace: str, query: str,
+                 top_k: Optional[int] = None) -> RetrievedContext:
+        return self.retrieve_batch([(namespace, query)], top_k=top_k)[0]
+
+    def retrieve_batch(self, requests: Sequence[Tuple[str, str]],
+                       top_k: Optional[int] = None) -> List[RetrievedContext]:
+        """[(namespace, query), ...] -> per-request RetrievedContext.
+
+        The cross-tenant hot path: one embed_texts call for every pending
+        query, one masked topk_mips launch against the packed bank.  The
+        per-request results are identical to sequential retrieve() calls."""
+        if not requests:
+            return []
+        k = top_k or self.top_k
+        # reads never allocate tenant state: unknown namespaces stay unknown
+        # (no leak from typo'd/adversarial queries, evict() stays evicted)
+        tenants = [self._tenants.get(ns) for ns, _ in requests]
+        qvecs = self.embedder.embed_texts([q for _, q in requests])
+        dense_ids = None
+        if self.vindex.n and self.vindex.n_alive:
+            # unknown tenants get a never-assigned ns id (>= 0, so it can't
+            # collide with the -1 tombstone label): they match no bank row
+            unused = len(self._ns_ids)
+            q_ns = np.asarray([t.ns_id if t else unused for t in tenants],
+                              np.int32)
+            row_ns = np.asarray(self._row_ns, np.int32)
+            pool = min(self.pool, self.vindex.n)
+            _, dense_ids = self.vindex.search_masked(qvecs, q_ns, row_ns,
+                                                     k=pool)
+        out: List[RetrievedContext] = []
+        for r, ((ns, qtext), t) in enumerate(zip(requests, tenants)):
+            if t is None:
+                text = MemoriMemory.render([], [])
+                out.append(RetrievedContext([], [], text,
+                                            self.tokenizer.count(text)))
+                continue
+            dense_rank = [] if dense_ids is None else \
+                [int(i) for i in dense_ids[r] if i >= 0]
+            _, sparse_ids = self.bm25.topk(qtext, k=self.pool,
+                                           namespace=t.ns_id)
+            sparse_rank = [int(i) for i in sparse_ids]
+            fused = rrf_fuse([dense_rank, sparse_rank],
+                             weights=[self.dense_weight, self.sparse_weight])
+            scored = [(t.triples.get(self._row_tid[g]), score)
+                      for g, score in fused[:k]]
+            ctx = self.budgeter.select(scored, t.summaries)
+            text = MemoriMemory.render(ctx.triples, ctx.summaries)
+            out.append(RetrievedContext(ctx.triples, ctx.summaries, text,
+                                        self.tokenizer.count(text)))
+        return out
+
+    def answer_prompt(self, namespace: str, question: str
+                      ) -> Tuple[str, RetrievedContext]:
+        ctx = self.retrieve(namespace, question)
+        return ANSWER_PROMPT.format(memories=ctx.text,
+                                    question=question), ctx
+
+    # -- eviction ----------------------------------------------------------------
+    def evict(self, namespace: str) -> int:
+        """Drop a whole tenant: tombstone its bank rows + BM25 docs, free its
+        stores.  Returns the number of rows evicted."""
+        t = self._tenants.pop(namespace, None)
+        if t is None:
+            return 0
+        live = [row for tid, row in enumerate(t.rows) if tid not in t.evicted]
+        self.vindex.delete(live)
+        self.bm25.remove(live)
+        return len(live)
+
+    def evict_superseded(self, namespace: str) -> int:
+        """Physically evict triples superseded under conflict resolution
+        (triples.latest_for_key keeps the newest version of every
+        (subject, predicate) key; the older versions leave the indices)."""
+        t = self._tenants.get(namespace)
+        if t is None:
+            return 0
+        fresh = [tid for tid in t.triples.superseded_ids()
+                 if tid not in t.evicted]
+        rows = [t.rows[tid] for tid in fresh]
+        self.vindex.delete(rows)
+        self.bm25.remove(rows)
+        t.evicted.update(fresh)
+        return len(fresh)
+
+    # -- stats ----------------------------------------------------------------------
+    def stats(self) -> dict:
+        per_ns = {
+            ns: {
+                "triples": len(t.triples),
+                "summaries": len(t.summaries),
+                "evicted": len(t.evicted),
+            } for ns, t in self._tenants.items()
+        }
+        return {
+            "namespaces": len(self._tenants),
+            "bank_rows": self.vindex.n,
+            "alive_rows": self.vindex.n_alive,
+            "tombstones": self.vindex.n_dead,
+            "bm25_docs": len(self.bm25),
+            "per_namespace": per_ns,
+        }
+
+
+class NamespaceView:
+    """MemoriMemory-compatible facade over one namespace of a MemoryService:
+    MemoriClient (and anything else written against MemoriMemory's surface)
+    runs on the shared service unchanged.  The namespace key IS the
+    conversation scope, so record_session's conversation_id is subsumed by
+    it (kept in the signature for drop-in compatibility)."""
+
+    def __init__(self, service: MemoryService, namespace: str):
+        self.service = service
+        self.namespace = namespace
+
+    def record_session(self, conversation_id: str, session_id: str,
+                       messages: Sequence[Message]):
+        return self.service.record(self.namespace, session_id, messages)
+
+    def retrieve(self, query: str,
+                 top_k: Optional[int] = None) -> RetrievedContext:
+        return self.service.retrieve(self.namespace, query, top_k=top_k)
+
+    def answer_prompt(self, question: str) -> Tuple[str, RetrievedContext]:
+        return self.service.answer_prompt(self.namespace, question)
+
+    def stats(self) -> dict:
+        t = self.service._tenants.get(self.namespace)
+        if t is None:
+            return {"triples": 0, "summaries": 0, "evicted": 0}
+        return {"triples": len(t.triples), "summaries": len(t.summaries),
+                "evicted": len(t.evicted)}

@@ -63,6 +63,19 @@ class TripleStore:
     def versions(self, tid: int) -> List[Triple]:
         return [self._triples[i] for i in self._by_key[self._triples[tid].key()]]
 
+    def superseded_ids(self) -> List[int]:
+        """Ids of every triple that is NOT the latest version of its
+        (subject, predicate) key — the rows a service may physically evict
+        from its indices once conflict resolution has settled on the newest
+        value.  Tie-breaking matches latest_for_key (first max by timestamp)."""
+        out: List[int] = []
+        for ids in self._by_key.values():
+            if len(ids) < 2:
+                continue
+            latest = max(ids, key=lambda i: self._triples[i].timestamp)
+            out.extend(i for i in ids if i != latest)
+        return out
+
     def __len__(self) -> int:
         return len(self._triples)
 

@@ -31,6 +31,7 @@ class VectorIndex:
         self.n = 0
         self.use_kernel = use_kernel
         self._bank = np.zeros((capacity, dim), np.float32)
+        self._alive = np.ones((capacity,), bool)
 
     def add(self, vecs) -> np.ndarray:
         vecs = np.asarray(vecs, np.float32)
@@ -40,8 +41,11 @@ class VectorIndex:
         while self.n + m > self._bank.shape[0]:
             self._bank = np.concatenate(
                 [self._bank, np.zeros_like(self._bank)], axis=0)
+            self._alive = np.concatenate(
+                [self._alive, np.ones_like(self._alive)])
         ids = np.arange(self.n, self.n + m)
         self._bank[self.n: self.n + m] = vecs
+        self._alive[self.n: self.n + m] = True
         self.n += m
         return ids
 
@@ -49,15 +53,47 @@ class VectorIndex:
     def bank(self) -> np.ndarray:
         return self._bank[: self.n]
 
+    @property
+    def n_alive(self) -> int:
+        return int(self._alive[: self.n].sum())
+
+    @property
+    def n_dead(self) -> int:
+        return self.n - self.n_alive
+
+    def alive(self, ids=None):
+        """Liveness of `ids` (or the full (n,) mask when ids is None)."""
+        if ids is None:
+            return self._alive[: self.n].copy()
+        return self._alive[np.asarray(ids, np.int64)]
+
+    def delete(self, ids) -> int:
+        """Tombstone rows: ids keep their slots (the tid==row alignment with
+        TripleStore/BM25 survives) but the vectors are physically zeroed and
+        the rows never surface from search again.  Returns #newly deleted."""
+        ids = np.asarray(ids, np.int64).ravel()
+        ids = ids[(ids >= 0) & (ids < self.n)]
+        ids = ids[self._alive[ids]]
+        self._alive[ids] = False
+        self._bank[ids] = 0.0
+        return int(ids.size)
+
     def search(self, queries, k: int) -> Tuple[np.ndarray, np.ndarray]:
-        """queries (Q, D) -> (scores (Q, k), ids (Q, k)); ids == -1 beyond n."""
+        """queries (Q, D) -> (scores (Q, k), ids (Q, k)); ids == -1 beyond n.
+        Tombstoned rows never appear: with any dead rows the search routes
+        through the masked kernel (uniform namespace, dead rows -> -1),
+        which keeps k static across delete()s — no per-delete retrace and
+        no over-fetch."""
         queries = jnp.asarray(queries, jnp.float32)
         if queries.ndim == 1:
             queries = queries[None]
-        if self.n == 0:
-            Q = queries.shape[0]
+        Q = queries.shape[0]
+        if self.n == 0 or self.n_alive == 0:
             return (np.full((Q, k), -np.inf, np.float32),
                     np.full((Q, k), -1, np.int64))
+        if self.n_dead:
+            return self.search_masked(queries, np.zeros((Q,), np.int32),
+                                      np.zeros((self.n,), np.int32), k)
         bank = jnp.asarray(self.bank)
         kk = min(k, self.n)
         if self.use_kernel:
@@ -71,10 +107,56 @@ class VectorIndex:
             i = np.pad(i, ((0, 0), (0, k - kk)), constant_values=-1)
         return s, i
 
+    def search_masked(self, queries, q_ns, row_ns, k: int
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+        """Batched multi-tenant search: one kernel launch over the packed
+        bank.  q_ns (Q,) >= 0 is each query's namespace, row_ns (n,) labels
+        every bank row; tombstoned rows are masked regardless of their label.
+        Rows outside the query's namespace never appear (ids -1 / -inf)."""
+        queries = jnp.asarray(queries, jnp.float32)
+        if queries.ndim == 1:
+            queries = queries[None]
+        Q = queries.shape[0]
+        if self.n == 0 or self.n_alive == 0:
+            return (np.full((Q, k), -np.inf, np.float32),
+                    np.full((Q, k), -1, np.int64))
+        row_ns = np.asarray(row_ns, np.int32)
+        assert row_ns.shape == (self.n,), (row_ns.shape, self.n)
+        eff_ns = jnp.asarray(np.where(self._alive[: self.n], row_ns, -1))
+        q_ns = jnp.asarray(q_ns, jnp.int32)
+        kk = min(k, self.n)
+        if self.use_kernel:
+            s, i = kops.topk_mips_masked(queries, jnp.asarray(self.bank),
+                                         q_ns, eff_ns, k=kk)
+        else:
+            s, i = kref.topk_mips_masked_ref(queries, jnp.asarray(self.bank),
+                                             q_ns, eff_ns, k=kk)
+        s = np.asarray(s)
+        i = np.asarray(i, np.int64)
+        if kk < k:
+            s = np.pad(s, ((0, 0), (0, k - kk)), constant_values=-np.inf)
+            i = np.pad(i, ((0, 0), (0, k - kk)), constant_values=-1)
+        return s, i
+
 
 # ---------------------------------------------------------------------------
 # Distributed search (shard_map): used by launch/dryrun and on real meshes.
 # ---------------------------------------------------------------------------
+
+# jax moved shard_map out of experimental (and renamed check_rep->check_vma);
+# support both so the CPU-mesh parity tests run on older pinned jax too
+_shard_map = getattr(jax, "shard_map", None)
+if _shard_map is None:                                    # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def _shard_map_unchecked(fn, mesh, in_specs, out_specs):
+    import inspect
+    flag = "check_vma" if "check_vma" in \
+        inspect.signature(_shard_map).parameters else "check_rep"
+    return _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **{flag: False})
+
 
 def sharded_topk(queries, bank, k: int, mesh: Mesh, axis_names=("data", "model")):
     """bank rows sharded over `axis_names` (flattened); returns global
@@ -99,8 +181,8 @@ def sharded_topk(queries, bank, k: int, mesh: Mesh, axis_names=("data", "model")
 
     spec_bank = P(flat_axes)
     # outputs are replicated by construction (all_gather + local re-rank);
-    # check_vma can't prove it, so we assert it ourselves
-    fn = jax.shard_map(local, mesh=mesh,
-                       in_specs=(P(), spec_bank),
-                       out_specs=(P(), P()), check_vma=False)
+    # the replication checker can't prove it, so we assert it ourselves
+    fn = _shard_map_unchecked(local, mesh=mesh,
+                              in_specs=(P(), spec_bank),
+                              out_specs=(P(), P()))
     return fn(queries, bank)

@@ -27,6 +27,17 @@ def topk_mips(queries, bank, k: int = 32, *, block_q: int = 128,
                          interpret=interpret)
 
 
+@functools.partial(jax.jit, static_argnames=("k", "block_q", "block_n", "interpret"))
+def topk_mips_masked(queries, bank, q_ns, bank_ns, k: int = 32, *,
+                     block_q: int = 128, block_n: int = 512,
+                     interpret: bool | None = None):
+    """Namespace-masked batched MIPS: one launch scores many tenants' queries
+    against one packed multi-tenant bank (cross-namespace hits -> NEG_INF/-1)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    return _tm.topk_mips(queries, bank, k, q_ns=q_ns, bank_ns=bank_ns,
+                         block_q=block_q, block_n=block_n, interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
                                              "block_q", "block_k", "interpret"))
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,

@@ -15,6 +15,21 @@ def topk_mips_ref(queries, bank, k: int = 32):
     return scores, idx.astype(jnp.int32)
 
 
+def topk_mips_masked_ref(queries, bank, q_ns, bank_ns, k: int = 32):
+    """Namespace-masked MIPS oracle: cross-namespace scores become NEG_INF
+    and their indices -1 (matching the kernel, whose running top-k never
+    admits a masked column).  q_ns (Q,) i32 >= 0; bank_ns (N,) i32 with -1
+    marking tombstoned rows."""
+    s = jnp.einsum("qd,nd->qn", queries.astype(jnp.float32),
+                   bank.astype(jnp.float32))
+    ok = jnp.asarray(q_ns, jnp.int32)[:, None] == \
+        jnp.asarray(bank_ns, jnp.int32)[None, :]
+    s = jnp.where(ok, s, NEG_INF)
+    scores, idx = jax.lax.top_k(s, k)
+    idx = jnp.where(scores > NEG_INF / 2, idx, -1)
+    return scores, idx.astype(jnp.int32)
+
+
 def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
                         scale=None):
     """q: (B,K,G,S,D); k,v: (B,K,T,D) -> (B,K,G,S,D)."""

@@ -13,6 +13,13 @@ structures on TPU.
 Grid: (num_q_blocks, num_bank_blocks)   — bank dim innermost/sequential.
 Per-step top-k merge is an unrolled k-iteration argmax sweep (Pallas-TPU
 friendly: no sort, no scatter).
+
+Multi-tenant extension: when per-query and per-bank-row namespace ids are
+supplied, cross-namespace hits are masked to NEG_INF *before* the top-k
+merge, so one kernel launch serves a whole batch of tenants against one
+packed bank (the MemoryService batched-retrieval path).  Rows with
+namespace -1 are tombstones and match no query.  Without namespaces the
+original kernel runs unchanged.
 """
 from __future__ import annotations
 
@@ -58,10 +65,35 @@ def _kernel(q_ref, bank_ref, scores_ref, idx_ref, *, block_n: int, k: int,
     _merge_topk(scores_ref, idx_ref, s, col, k)
 
 
-def topk_mips(queries, bank, k: int = 32, *, block_q: int = 128,
-              block_n: int = 512, interpret: bool = False):
+def _kernel_masked(q_ref, bank_ref, qns_ref, bns_ref, scores_ref, idx_ref, *,
+                   block_n: int, k: int, n_valid: int):
+    nb = pl.program_id(1)
+
+    @pl.when(nb == 0)
+    def _init():
+        scores_ref[...] = jnp.full_like(scores_ref, NEG_INF)
+        idx_ref[...] = jnp.full_like(idx_ref, -1)
+
+    q = q_ref[...]
+    b = bank_ref[...]
+    s = jax.lax.dot_general(q, b, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)     # (Qb, Nb)
+    col = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1) + nb * block_n
+    # (Qb, 1) == (1, Nb) broadcast: a hit survives only within its namespace
+    ok = (col < n_valid) & (qns_ref[...] == bns_ref[...])
+    s = jnp.where(ok, s, NEG_INF)
+    _merge_topk(scores_ref, idx_ref, s, col, k)
+
+
+def topk_mips(queries, bank, k: int = 32, *, q_ns=None, bank_ns=None,
+              block_q: int = 128, block_n: int = 512, interpret: bool = False):
     """queries (Q, D) · bank (N, D) -> (scores (Q, k) f32, indices (Q, k) i32).
-    Rows beyond N (padding) never appear: padded bank rows score NEG_INF."""
+    Rows beyond N (padding) never appear: padded bank rows score NEG_INF.
+
+    Optional namespace mask: q_ns (Q,) i32 and bank_ns (N,) i32 (both or
+    neither).  Bank rows whose namespace differs from the query's score
+    NEG_INF and keep index -1 if nothing in-namespace fills the slot; q_ns
+    must be >= 0, bank_ns == -1 marks tombstoned rows."""
     Q, D = queries.shape
     N = bank.shape[0]
     bq = min(block_q, max(8, Q))
@@ -72,21 +104,45 @@ def topk_mips(queries, bank, k: int = 32, *, block_q: int = 128,
     bp = jnp.pad(bank, ((0, Np - N), (0, 0)))
 
     grid = (Qp // bq, Np // bn)
+    out_specs = [
+        pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
+        pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((Qp, k), jnp.float32),
+        jax.ShapeDtypeStruct((Qp, k), jnp.int32),
+    ]
+    if q_ns is None and bank_ns is None:
+        scores, idx = pl.pallas_call(
+            functools.partial(_kernel, block_n=bn, k=k, n_valid=N),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bq, D), lambda i, j: (i, 0)),
+                pl.BlockSpec((bn, D), lambda i, j: (j, 0)),
+            ],
+            out_specs=out_specs,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(qp, bp)
+        return scores[:Q], idx[:Q]
+    assert q_ns is not None and bank_ns is not None, \
+        "q_ns and bank_ns must be given together"
+    # namespace ids ride along as 2-D blocks: (Qp, 1) column / (1, Np) row
+    qns = jnp.pad(jnp.asarray(q_ns, jnp.int32), (0, Qp - Q),
+                  constant_values=-1).reshape(Qp, 1)
+    bns = jnp.pad(jnp.asarray(bank_ns, jnp.int32), (0, Np - N),
+                  constant_values=-2).reshape(1, Np)
     scores, idx = pl.pallas_call(
-        functools.partial(_kernel, block_n=bn, k=k, n_valid=N),
+        functools.partial(_kernel_masked, block_n=bn, k=k, n_valid=N),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bq, D), lambda i, j: (i, 0)),
             pl.BlockSpec((bn, D), lambda i, j: (j, 0)),
+            pl.BlockSpec((bq, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
         ],
-        out_specs=[
-            pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
-            pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((Qp, k), jnp.float32),
-            jax.ShapeDtypeStruct((Qp, k), jnp.int32),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
-    )(qp, bp)
+    )(qp, bp, qns, bns)
     return scores[:Q], idx[:Q]

@@ -23,7 +23,7 @@ def main():
     import jax
 
     from repro.configs import get_config
-    from repro.core import MemoriClient, MemoriMemory
+    from repro.core import MemoriClient, MemoryService
     from repro.core.embedder import HashEmbedder
     from repro.data.tokenizer import HashTokenizer
     from repro.models.model_api import Model
@@ -39,14 +39,16 @@ def main():
     engine = Engine(model, params, max_len=args.max_len, slots=2,
                     sampler=SamplerConfig(temperature=0.8, top_k=40),
                     tokenizer=tok)
-    memory = MemoriMemory(HashEmbedder(), budget=800, use_kernel=False)
-    client = MemoriClient(
-        lambda p: engine.generate([p[-500:]], max_new_tokens=12)[0], memory)
+    # one multi-tenant service fronts every conversation on this host
+    service = MemoryService(HashEmbedder(), budget=800, use_kernel=False)
+    llm = lambda p: engine.generate([p[-500:]], max_new_tokens=12)[0]  # noqa: E731
+    client = MemoriClient(llm, service.namespace("u0/demo"))
 
     print(client.chat("I work as a translator and I live in Cusco."))
     client.end_session()
-    ctx = memory.retrieve("Where does the user live?")
+    [ctx] = service.retrieve_batch([("u0/demo", "Where does the user live?")])
     print(f"retrieved {len(ctx.triples)} triples, {ctx.token_count} tokens")
+    print("service:", service.stats())
     print("engine:", engine.stats)
 
 

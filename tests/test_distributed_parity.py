@@ -1,0 +1,46 @@
+"""Distributed retrieval parity: sharded_topk on a CPU mesh of fake host
+devices must return exactly the single-device topk_mips / topk_mips_ref
+results, including the k > shard_rows edge.  Runs in a subprocess so the
+main pytest process keeps its single CPU device (same pattern as
+test_distribution.py)."""
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+
+@pytest.mark.slow
+def test_sharded_topk_parity_cpu_mesh():
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.vector_index import sharded_topk
+        from repro.kernels import ops, ref
+
+        mesh = jax.make_mesh((4, 2), ("data", "model"))   # 8 shards
+        q = jax.random.normal(jax.random.PRNGKey(0), (5, 32))
+        bank = jax.random.normal(jax.random.PRNGKey(1), (64, 32))
+        # shard_rows = 64/8 = 8: k=6 fits in one shard, k=12 exceeds it
+        for k in (6, 12):
+            with mesh:
+                s, i = sharded_topk(q, bank, k=k, mesh=mesh)
+            sr, ir = ref.topk_mips_ref(q, bank, k=k)
+            np.testing.assert_array_equal(np.asarray(i), np.asarray(ir))
+            np.testing.assert_allclose(np.asarray(s), np.asarray(sr),
+                                       rtol=1e-5)
+            sk, ik = ops.topk_mips(q, bank, k=k, block_q=8, block_n=16)
+            np.testing.assert_array_equal(np.asarray(i), np.asarray(ik))
+            np.testing.assert_allclose(np.asarray(s), np.asarray(sk),
+                                       rtol=1e-4)
+        print("PARITY_OK")
+    """)
+    # JAX_PLATFORMS=cpu keeps the child off the libtpu plugin probe: its
+    # /tmp/libtpu_lockfile serializes against other jax processes (the
+    # pytest parent / earlier subprocess tests) and can stall the child
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=300,
+                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                              "HOME": "/root", "JAX_PLATFORMS": "cpu"})
+    assert "PARITY_OK" in out.stdout, out.stderr[-2000:]

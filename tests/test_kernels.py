@@ -36,6 +36,58 @@ def test_topk_mips_matches_oracle(q_n, bank_n, dim, kk, dtype):
                                rtol=1e-3, atol=1e-3)
 
 
+@pytest.mark.parametrize("q_n,bank_n,dim,kk,n_ns", [
+    (1, 16, 8, 4, 1),
+    (7, 100, 32, 8, 3),
+    (33, 513, 64, 16, 5),     # non-divisible bank vs block
+])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_topk_mips_masked_matches_oracle(q_n, bank_n, dim, kk, n_ns, dtype):
+    q = jax.random.normal(k(21), (q_n, dim)).astype(dtype)
+    bank = jax.random.normal(k(22), (bank_n, dim)).astype(dtype)
+    q_ns = jnp.asarray(np.arange(q_n) % n_ns, jnp.int32)
+    bank_ns = np.arange(bank_n) % n_ns
+    bank_ns[::7] = -1                       # sprinkle tombstones
+    bank_ns = jnp.asarray(bank_ns, jnp.int32)
+    s, i = ops.topk_mips_masked(q, bank, q_ns, bank_ns, k=kk,
+                                block_q=32, block_n=64)
+    sr, ir = ref.topk_mips_masked_ref(q, bank, q_ns, bank_ns, k=kk)
+    assert i.shape == (q_n, kk) and s.shape == (q_n, kk)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ir))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr),
+                               rtol=1e-3, atol=1e-3)
+    # every returned hit stays inside its query's namespace
+    bn = np.asarray(bank_ns)
+    for r in range(q_n):
+        for idx in np.asarray(i)[r]:
+            if idx >= 0:
+                assert bn[idx] == int(q_ns[r])
+
+
+def test_topk_mips_masked_uniform_ns_equals_unmasked():
+    """With every row in one namespace the mask is a no-op: the masked
+    kernel must reproduce the unmasked kernel exactly."""
+    q = jax.random.normal(k(23), (9, 16))
+    bank = jax.random.normal(k(24), (77, 16))
+    s0, i0 = ops.topk_mips(q, bank, k=8, block_q=8, block_n=16)
+    s1, i1 = ops.topk_mips_masked(q, bank, jnp.zeros((9,), jnp.int32),
+                                  jnp.zeros((77,), jnp.int32), k=8,
+                                  block_q=8, block_n=16)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+
+
+def test_topk_mips_masked_empty_namespace_returns_sentinels():
+    q = jax.random.normal(k(25), (2, 8))
+    bank = jax.random.normal(k(26), (20, 8))
+    q_ns = jnp.asarray([9, 0], jnp.int32)    # ns 9 owns no rows
+    bank_ns = jnp.zeros((20,), jnp.int32)
+    s, i = ops.topk_mips_masked(q, bank, q_ns, bank_ns, k=4,
+                                block_q=8, block_n=8)
+    assert (np.asarray(i)[0] == -1).all()
+    assert (np.asarray(i)[1] >= 0).all()
+
+
 def test_topk_scores_sorted_and_indices_valid():
     q = jax.random.normal(k(3), (9, 16))
     bank = jax.random.normal(k(4), (77, 16))

@@ -2,7 +2,12 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+# hypothesis isn't baked into every image; the whole module skips (not
+# errors) at collection when it's absent, and runs normally when present
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.bm25 import BM25Index
 from repro.core.budget import TokenBudgeter

@@ -1,0 +1,237 @@
+"""MemoryService: namespace isolation, batched==sequential retrieval,
+tombstone/eviction correctness, and the index-layer primitives under it."""
+import numpy as np
+import pytest
+
+from repro.core import MemoriClient, MemoryService, Message, Triple, TripleStore
+from repro.core.bm25 import BM25Index
+from repro.core.embedder import HashEmbedder
+from repro.core.vector_index import VectorIndex
+
+EMB = HashEmbedder()
+
+
+def _svc(**kw):
+    kw.setdefault("use_kernel", False)   # pure-jnp search: fast on CPU
+    return MemoryService(EMB, **kw)
+
+
+def _session(texts, speaker="Caroline", ts=1700000000.0):
+    return [Message(speaker, t, ts) for t in texts]
+
+
+def _fill(svc):
+    svc.record("alice/c0", "s0", _session(
+        ["I work as a botanist and I live in Tallinn.",
+         "I adopted a hedgehog named Biscuit."], speaker="Alice"))
+    svc.record("bob/c0", "s0", _session(
+        ["I work as a welder and I live in Porto.",
+         "I adopted a parrot named Olive."], speaker="Bob"))
+    svc.record("carol/c0", "s0", _session(
+        ["I work as a pilot and I live in Cusco."], speaker="Carol"))
+    return svc
+
+
+# -- namespace isolation ------------------------------------------------------
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_namespace_isolation(use_kernel):
+    svc = _svc(use_kernel=use_kernel)
+    _fill(svc)
+    for q in ["Which city does the user live in?",
+              "What pet was adopted?", "What is the user's job?"]:
+        ctx_a = svc.retrieve("alice/c0", q)
+        ctx_b = svc.retrieve("bob/c0", q)
+        assert ctx_a.triples, q
+        assert all(t.conversation_id == "alice/c0" for t in ctx_a.triples)
+        assert all(s.conversation_id == "alice/c0" for s in ctx_a.summaries)
+        assert all(t.conversation_id == "bob/c0" for t in ctx_b.triples)
+    # and the facts themselves stay per-tenant
+    ctx = svc.retrieve("alice/c0", "Which city does the user live in?")
+    objs = {t.object for t in ctx.triples}
+    assert "tallinn" in objs and "porto" not in objs
+
+
+def test_unknown_namespace_is_empty_not_leaky():
+    svc = _fill(_svc())
+    before = svc.stats()["namespaces"]
+    ctx = svc.retrieve("mallory/c0", "Which city does the user live in?")
+    assert ctx.triples == [] and ctx.summaries == []
+    # reads must not allocate tenant state for arbitrary namespaces
+    assert svc.stats()["namespaces"] == before
+    assert "mallory/c0" not in svc.namespaces()
+
+
+def test_evicted_namespace_stays_evicted_after_reads():
+    svc = _fill(_svc())
+    svc.evict("carol/c0")
+    svc.retrieve("carol/c0", "anything?")
+    assert "carol/c0" not in svc.namespaces()
+
+
+# -- batched == sequential ----------------------------------------------------
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_retrieve_batch_equals_sequential(use_kernel):
+    svc = _svc(use_kernel=use_kernel)
+    _fill(svc)
+    batch = [("alice/c0", "Which city does the user live in?"),
+             ("bob/c0", "Which city does the user live in?"),
+             ("carol/c0", "What is the user's job?"),
+             ("alice/c0", "What pet was adopted?"),
+             ("mallory/c0", "anything at all?")]
+    batched = svc.retrieve_batch(batch)
+    sequential = [svc.retrieve(ns, q) for ns, q in batch]
+    assert len(batched) == len(sequential) == len(batch)
+    for got, want in zip(batched, sequential):
+        assert [t.text() for t in got.triples] == \
+            [t.text() for t in want.triples]
+        assert [s.render() for s in got.summaries] == \
+            [s.render() for s in want.summaries]
+        assert got.text == want.text
+        assert got.token_count == want.token_count
+
+
+def test_retrieve_batch_empty_and_single():
+    svc = _fill(_svc())
+    assert svc.retrieve_batch([]) == []
+    [ctx] = svc.retrieve_batch([("alice/c0", "Which city?")])
+    assert ctx.triples
+
+
+# -- eviction / tombstones -----------------------------------------------------
+
+def test_evict_superseded_removes_old_conflicting_version():
+    svc = _svc()
+    svc.record("a/c0", "s0", _session(["I work as a nurse."], ts=1.0))
+    svc.record("a/c0", "s1", _session(["I work as a chef."], ts=2.0))
+    assert svc.stats()["alive_rows"] == 2
+    n = svc.evict_superseded("a/c0")
+    assert n == 1
+    st = svc.stats()
+    assert st["alive_rows"] == 1 and st["tombstones"] == 1
+    ctx = svc.retrieve("a/c0", "What is the user's job?")
+    objs = [t.object for t in ctx.triples]
+    assert "chef" in objs and "nurse" not in objs
+    # idempotent: nothing left to evict
+    assert svc.evict_superseded("a/c0") == 0
+    # physically gone: the tombstoned vector row is zeroed
+    assert svc.vindex.n_dead == 1
+    dead = np.where(~svc.vindex.alive())[0]
+    assert (svc.vindex.bank[dead] == 0).all()
+
+
+def test_evict_namespace_drops_tenant_but_not_others():
+    svc = _fill(_svc())
+    before = svc.stats()["alive_rows"]
+    n = svc.evict("bob/c0")
+    assert n > 0
+    st = svc.stats()
+    assert st["alive_rows"] == before - n
+    assert "bob/c0" not in st["per_namespace"]
+    assert svc.retrieve("bob/c0", "Which city?").triples == []
+    # other tenants unaffected
+    ctx = svc.retrieve("alice/c0", "Which city does the user live in?")
+    assert any(t.object == "tallinn" for t in ctx.triples)
+    # a re-created namespace starts clean (old rows stay tombstoned)
+    svc.record("bob/c0", "s9", _session(["I live in Sapporo."], speaker="Bob"))
+    ctx = svc.retrieve("bob/c0", "Which city does the user live in?")
+    objs = {t.object for t in ctx.triples}
+    assert "sapporo" in objs and "porto" not in objs
+
+
+# -- SDK on the service ---------------------------------------------------------
+
+def test_memori_client_runs_on_namespace_view():
+    svc = _svc()
+    seen = []
+
+    def llm(prompt):
+        seen.append(prompt)
+        return "ok"
+
+    client = MemoriClient(llm, svc.namespace("u1/c0"))
+    client.chat("My favorite food is ramen.", timestamp=1.0)
+    client.end_session()
+    client.chat("Do you remember my favorite food?")
+    assert "ramen" in seen[-1].lower()
+    other = MemoriClient(llm, svc.namespace("u2/c0"))
+    other.chat("Do you remember my favorite food?")
+    assert "ramen" not in seen[-1].lower(), "memory leaked across namespaces"
+
+
+def test_service_stats_shape():
+    svc = _fill(_svc())
+    st = svc.stats()
+    assert st["namespaces"] == 3
+    assert st["bank_rows"] == st["alive_rows"] == st["bm25_docs"]
+    assert st["per_namespace"]["alice/c0"]["triples"] > 0
+    assert svc.namespace("alice/c0").stats()["triples"] > 0
+
+
+# -- index-layer primitives ------------------------------------------------------
+
+def test_vector_index_delete_excludes_tombstones_exactly():
+    rng = np.random.default_rng(0)
+    vi = VectorIndex(dim=16, use_kernel=False)
+    vecs = rng.standard_normal((20, 16)).astype(np.float32)
+    vi.add(vecs)
+    dead = [0, 3, 7, 19]
+    assert vi.delete(dead) == 4
+    assert vi.delete(dead) == 0          # idempotent
+    assert vi.n_alive == 16 and vi.n_dead == 4
+    q = rng.standard_normal((3, 16)).astype(np.float32)
+    s, ids = vi.search(q, k=5)
+    assert not (set(np.asarray(ids).ravel().tolist()) & set(dead))
+    # exact: equals brute force over the alive rows only
+    alive = np.setdiff1d(np.arange(20), dead)
+    dots = q @ vecs[alive].T
+    for r in range(3):
+        want = alive[np.argsort(-dots[r], kind="stable")[:5]]
+        np.testing.assert_array_equal(np.asarray(ids)[r], want)
+
+
+def test_vector_index_delete_all_rows_safe():
+    vi = VectorIndex(dim=8, use_kernel=False)
+    vi.add(np.eye(4, 8, dtype=np.float32))
+    vi.delete([0, 1, 2, 3])
+    s, ids = vi.search(np.ones((1, 8), np.float32), k=3)
+    assert (np.asarray(ids) == -1).all()
+
+
+def test_bm25_namespace_scoping_matches_isolated_index():
+    shared = BM25Index()
+    solo = BM25Index()
+    a_docs = ["alpha beta gamma", "beta beta delta", "gamma epsilon"]
+    b_docs = ["alpha alpha alpha", "zeta eta"]
+    ids_a = shared.add(a_docs, namespace=0)
+    shared.add(b_docs, namespace=1)
+    solo.add(a_docs)
+    for q in ["alpha beta", "gamma", "zeta"]:
+        s_shared, i_shared = shared.topk(q, k=5, namespace=0)
+        s_solo, i_solo = solo.topk(q, k=5)
+        # scoped ranking == isolated index's ranking, with global doc ids
+        np.testing.assert_allclose(s_shared, s_solo, rtol=1e-5)
+        np.testing.assert_array_equal(i_shared,
+                                      np.asarray(ids_a)[i_solo])
+        assert set(i_shared.tolist()) <= set(ids_a)
+
+
+def test_bm25_remove_tombstones_docs():
+    idx = BM25Index()
+    idx.add(["apple pie", "apple tart", "banana split"])
+    assert idx.remove([0]) == 1 and idx.remove([0]) == 0
+    assert idx.alive_count == 2 and len(idx) == 3
+    _, ids = idx.topk("apple", k=3)
+    assert 0 not in ids.tolist() and 1 in ids.tolist()
+
+
+def test_triple_store_superseded_ids():
+    store = TripleStore()
+    store.add(Triple("a", "works as", "nurse", timestamp=1.0))
+    keep = store.add(Triple("a", "works as", "chef", timestamp=2.0))
+    store.add(Triple("a", "lives in", "porto", timestamp=1.0))
+    sup = store.superseded_ids()
+    assert sup == [0]
+    assert store.latest_for_key("a|works as").object == "chef"
+    assert keep not in sup
