@@ -10,13 +10,18 @@ import numpy as np
 def rrf_fuse(rankings: Sequence[Sequence[int]], weights: Sequence[float] = None,
              c: float = 60.0) -> List[Tuple[int, float]]:
     """Weighted reciprocal-rank fusion.  rankings: lists of doc ids, best
-    first.  Returns (doc_id, fused_score) sorted descending."""
+    first.  Returns (doc_id, fused_score) sorted descending.  Within one
+    ranking only a doc's best (first) rank counts — a duplicated id must not
+    accumulate score, or any upstream bug that emits duplicates silently
+    inflates that doc's fused rank."""
     weights = weights or [1.0] * len(rankings)
     scores: Dict[int, float] = {}
     for ranking, w in zip(rankings, weights):
+        seen = set()
         for rank, doc in enumerate(ranking):
-            if doc < 0:
+            if doc < 0 or doc in seen:
                 continue
+            seen.add(doc)
             scores[doc] = scores.get(doc, 0.0) + w / (c + rank + 1.0)
     return sorted(scores.items(), key=lambda kv: (-kv[1], kv[0]))
 

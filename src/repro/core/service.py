@@ -22,6 +22,7 @@ and the serving launchers run against the service unchanged.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
@@ -222,9 +223,22 @@ class NamespaceView:
     def __init__(self, service: MemoryService, namespace: str):
         self.service = service
         self.namespace = namespace
+        self._seen_conversation_id: Optional[str] = None
 
     def record_session(self, conversation_id: str, session_id: str,
                        messages: Sequence[Message]):
+        # the namespace key IS the scope, so conversation_id is otherwise
+        # ignored — warn a drop-in caller who reuses one view across several
+        # conversation_ids, since those scopes silently merge here
+        if self._seen_conversation_id is None:
+            self._seen_conversation_id = conversation_id
+        elif conversation_id != self._seen_conversation_id:
+            warnings.warn(
+                f"NamespaceView({self.namespace!r}) saw conversation_id="
+                f"{conversation_id!r} after {self._seen_conversation_id!r}: "
+                "both record into the same namespace scope — use "
+                f"service.namespace({conversation_id!r}) for a separate "
+                "scope.", stacklevel=2)
         return self.service.record(self.namespace, session_id, messages)
 
     def retrieve(self, query: str,

@@ -43,7 +43,12 @@ def _merge_topk(scores_ref, idx_ref, s, col, k: int):
         hit = cols == am[:, None]
         sel_i = jnp.sum(jnp.where(hit, all_i, 0), axis=1)
         scores_ref[:, j] = m
-        idx_ref[:, j] = sel_i
+        # once a query's candidates are exhausted, every remaining max is the
+        # NEG_INF sentinel and argmax degenerates to column 0 — whose all_i
+        # entry is a previously-selected index at grid steps nb > 0.  Emit -1
+        # instead (matching the oracle); real dot products never reach the
+        # sentinel, so live slots are unaffected.
+        idx_ref[:, j] = jnp.where(m > NEG_INF / 2, sel_i, -1)
         all_s = jnp.where(hit, NEG_INF, all_s)
 
 

@@ -40,6 +40,7 @@ def test_topk_mips_matches_oracle(q_n, bank_n, dim, kk, dtype):
     (1, 16, 8, 4, 1),
     (7, 100, 32, 8, 3),
     (33, 513, 64, 16, 5),     # non-divisible bank vs block
+    (9, 300, 16, 8, 40),      # multi-block bank, every ns owns < kk rows
 ])
 @pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
 def test_topk_mips_masked_matches_oracle(q_n, bank_n, dim, kk, n_ns, dtype):
@@ -75,6 +76,32 @@ def test_topk_mips_masked_uniform_ns_equals_unmasked():
                                   block_q=8, block_n=16)
     np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
     np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_topk_mips_masked_small_tenant_multiblock_emits_sentinels(dtype):
+    """Regression: a tenant owning 0 < rows < k in a bank spanning several
+    bank blocks must pad with -1 sentinels.  The old merge argmax'd over an
+    all-NEG_INF row once in-namespace candidates ran out, re-emitting the
+    index parked in running slot 0 at grid steps nb > 0 — ghost duplicates
+    that pass downstream `i >= 0` filters and inflate RRF scores."""
+    bank_n, kk = 1100, 8
+    q = jax.random.normal(k(27), (4, 8)).astype(dtype)
+    bank = jax.random.normal(k(28), (bank_n, 8)).astype(dtype)
+    bank_ns = np.zeros((bank_n,), np.int32)
+    bank_ns[[0, 40, 700]] = 1             # tenant 1 owns 3 of 1100 rows
+    bank_ns = jnp.asarray(bank_ns)
+    q_ns = jnp.asarray([1, 0, 1, 0], jnp.int32)
+    # default block_n=512: three sequential bank blocks
+    s, i = ops.topk_mips_masked(q, bank, q_ns, bank_ns, k=kk)
+    sr, ir = ref.topk_mips_masked_ref(q, bank, q_ns, bank_ns, k=kk)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ir))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr),
+                               rtol=1e-3, atol=1e-3)
+    i = np.asarray(i)
+    for r in (0, 2):                      # tenant-1 queries: 3 hits then -1
+        assert sorted(i[r][:3].tolist()) == [0, 40, 700]
+        assert (i[r][3:] == -1).all()
 
 
 def test_topk_mips_masked_empty_namespace_returns_sentinels():

@@ -1,11 +1,14 @@
 """MemoryService: namespace isolation, batched==sequential retrieval,
 tombstone/eviction correctness, and the index-layer primitives under it."""
+import warnings
+
 import numpy as np
 import pytest
 
 from repro.core import MemoriClient, MemoryService, Message, Triple, TripleStore
 from repro.core.bm25 import BM25Index
 from repro.core.embedder import HashEmbedder
+from repro.core.hybrid import rrf_fuse
 from repro.core.vector_index import VectorIndex
 
 EMB = HashEmbedder()
@@ -160,6 +163,17 @@ def test_memori_client_runs_on_namespace_view():
     assert "ramen" not in seen[-1].lower(), "memory leaked across namespaces"
 
 
+def test_namespace_view_warns_when_conversation_scopes_merge():
+    svc = _svc()
+    view = svc.namespace("u1/c0")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        view.record_session("c0", "s0", _session(["I live in Oslo."]))
+        view.record_session("c0", "s1", _session(["I own a canoe."]))
+    with pytest.warns(UserWarning, match="separate"):
+        view.record_session("c1", "s2", _session(["I collect stamps."]))
+
+
 def test_service_stats_shape():
     svc = _fill(_svc())
     st = svc.stats()
@@ -189,6 +203,31 @@ def test_vector_index_delete_excludes_tombstones_exactly():
     for r in range(3):
         want = alive[np.argsort(-dots[r], kind="stable")[:5]]
         np.testing.assert_array_equal(np.asarray(ids)[r], want)
+
+
+def test_vector_index_kernel_search_after_delete_pads_with_sentinels():
+    """Regression (single-tenant route to the masked-kernel ghost bug): once
+    delete() leaves fewer alive rows than k in a bank spanning several kernel
+    blocks, search must pad with -1, not duplicate the alive ids."""
+    rng = np.random.default_rng(1)
+    vi = VectorIndex(dim=8, use_kernel=True)
+    vi.add(rng.standard_normal((600, 8)).astype(np.float32))
+    vi.delete(np.arange(3, 600))          # 3 alive rows, 2 bank blocks of 512
+    s, ids = vi.search(rng.standard_normal((2, 8)).astype(np.float32), k=8)
+    ids = np.asarray(ids)
+    for r in range(2):
+        assert sorted(ids[r][:3].tolist()) == [0, 1, 2]
+        assert (ids[r][3:] == -1).all()
+
+
+def test_rrf_fuse_counts_each_doc_once_per_ranking():
+    """A duplicated id inside one ranking must not accumulate score — that
+    amplification is exactly how upstream duplicate bugs distort fusion."""
+    assert rrf_fuse([[5, 7, 5, 5, 5], [7]]) == rrf_fuse([[5, 7], [7]])
+    # best (first) occurrence is the one that counts
+    dup = dict(rrf_fuse([[3, 9, 3], [9]]))
+    clean = dict(rrf_fuse([[3, 9], [9]]))
+    assert dup[3] == clean[3] and dup[9] == clean[9]
 
 
 def test_vector_index_delete_all_rows_safe():
