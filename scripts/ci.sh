@@ -13,4 +13,11 @@ python -m pytest -q -m "not slow"
 if [[ "${FAST_ONLY:-0}" != "1" ]]; then
     echo "== tier-1: pytest -x -q (full suite) =="
     python -m pytest -x -q
+
+    echo "== bench smoke: service throughput (retrieval + ingestion + compaction) =="
+    JAX_PLATFORMS=cpu python benchmarks/service_throughput.py \
+        --tenants 4 --sessions 2 --batches 1,8 --mode all \
+        --json BENCH_service.json
+    echo "== BENCH_service.json =="
+    cat BENCH_service.json
 fi

@@ -43,6 +43,20 @@ def save(path: str, tree: PyTree) -> int:
     return len(blob)
 
 
+def load_raw(path: str) -> dict:
+    """Load a checkpoint as a flat {path_key: np.ndarray} dict without a
+    reference pytree.  The entries are self-describing (dtype + shape), so
+    this suits consumers whose structure is only known from the checkpoint
+    itself (e.g. core/store.py snapshots).  Arrays are writable copies."""
+    with open(path, "rb") as f:
+        entries = msgpack.unpackb(f.read(), raw=False)
+    out = {}
+    for key, e in entries.items():
+        arr = np.frombuffer(e["data"], dtype=np.dtype(e["dtype"]))
+        out[key] = arr.reshape(e["shape"]).copy()
+    return out
+
+
 def load(path: str, like: PyTree) -> PyTree:
     """Load into the structure of `like` (shape/dtype-checked)."""
     with open(path, "rb") as f:

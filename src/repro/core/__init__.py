@@ -6,5 +6,7 @@ from repro.core.extraction import LMExtractor, Message, RuleExtractor  # noqa: F
 from repro.core.memory import ANSWER_PROMPT, MemoriMemory, RetrievedContext  # noqa: F401
 from repro.core.sdk import MemoriClient  # noqa: F401
 from repro.core.service import MemoryService, NamespaceView  # noqa: F401
+from repro.core.store import (MemoryStore, StoreInvariantError,  # noqa: F401
+                              TenantState)
 from repro.core.summaries import Summary, SummaryStore  # noqa: F401
 from repro.core.triples import Triple, TripleStore  # noqa: F401

@@ -8,61 +8,66 @@ summary of the session they came from.
 Designed as a *background* pipeline: `enqueue` is cheap; `process_pending`
 runs extraction/embedding/indexing in batches (in production this is the
 async worker; the benchmark calls it synchronously).
+
+Since the storage-engine refactor this is a thin single-tenant wrapper over
+`core/store.py`'s MemoryStore — the same write path MemoryService batches
+across tenants.  All sessions (any number of conversations) land in one
+internal namespace, which keeps the historical alignment triple id ==
+bank row == BM25 doc id that `MemoriMemory`'s hybrid search relies on.
 """
 from __future__ import annotations
 
 from typing import List, Optional, Sequence, Tuple
 
-from repro.core.bm25 import BM25Index
-from repro.core.extraction import Extractor, Message, RuleExtractor
-from repro.core.summaries import Summary, SummaryStore
-from repro.core.triples import Triple, TripleStore
-from repro.core.vector_index import VectorIndex
+from repro.core.extraction import Extractor, Message
+from repro.core.store import MemoryStore
+from repro.core.summaries import Summary
+from repro.core.triples import Triple
 
 
 class AdvancedAugmentation:
+    _NS = "__single__"
+
     def __init__(self, embedder, extractor: Optional[Extractor] = None,
                  dim: int = 256, use_kernel: bool = True):
+        self.store = MemoryStore(embedder, extractor, dim=dim,
+                                 use_kernel=use_kernel)
         self.embedder = embedder
-        self.extractor = extractor or RuleExtractor()
-        self.triples = TripleStore()
-        self.summaries = SummaryStore()
-        self.vindex = VectorIndex(dim=dim, use_kernel=use_kernel)
-        self.bm25 = BM25Index()
-        self._pending: List[Tuple[str, str, Sequence[Message]]] = []
+        self.extractor = self.store.extractor
+
+    # the single tenant's stores, exposed under the historical names
+    @property
+    def triples(self):
+        return self.store.tenant(self._NS).triples
+
+    @property
+    def summaries(self):
+        return self.store.tenant(self._NS).summaries
+
+    @property
+    def vindex(self):
+        return self.store.vindex
+
+    @property
+    def bm25(self):
+        return self.store.bm25
 
     # -- background pipeline surface ------------------------------------
     def enqueue(self, conversation_id: str, session_id: str,
                 messages: Sequence[Message]) -> None:
-        self._pending.append((conversation_id, session_id, list(messages)))
+        self.store.enqueue(self._NS, session_id, messages,
+                           conversation_id=conversation_id)
 
     def process_pending(self) -> int:
-        n = 0
-        while self._pending:
-            conv, sess, msgs = self._pending.pop(0)
-            self._process(conv, sess, msgs)
-            n += 1
-        return n
+        """Batched drain: one embed_texts call + one bank append for every
+        pending session (see MemoryStore.flush)."""
+        return len(self.store.flush())
 
     def ingest(self, conversation_id: str, session_id: str,
                messages: Sequence[Message]) -> Tuple[List[Triple], Summary]:
         """Synchronous enqueue+process of one session."""
-        return self._process(conversation_id, session_id, messages)
-
-    # -- internals --------------------------------------------------------
-    def _process(self, conv: str, sess: str, msgs: Sequence[Message]):
-        triples, summary = self.extractor.extract(conv, sess, msgs)
-        self.summaries.add(summary)
-        if triples:
-            texts = [t.text() for t in triples]
-            vecs = self.embedder.embed_texts(texts)
-            vids = self.vindex.add(vecs)
-            bids = self.bm25.add(texts)
-            for t, vi, bi in zip(triples, vids, bids):
-                tid = self.triples.add(t)
-                # the three indices stay aligned: tid == vi == bi
-                assert tid == int(vi) == int(bi), (tid, vi, bi)
-        return triples, summary
+        return self.store.ingest(self._NS, session_id, messages,
+                                 conversation_id=conversation_id)
 
     # -- stats -------------------------------------------------------------
     def stats(self) -> dict:
@@ -70,5 +75,5 @@ class AdvancedAugmentation:
             "triples": len(self.triples),
             "summaries": len(self.summaries),
             "bank_rows": self.vindex.n,
-            "pending": len(self._pending),
+            "pending": self.store.pending_count,
         }

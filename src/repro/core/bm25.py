@@ -7,16 +7,26 @@ comparison:  tf(t, d) = sum_j [doc_ids[d, j] == t].  Ranking semantics match
 textbook BM25 up to hash collisions (property-tested against a dict-based
 oracle in tests/).
 
-Multi-tenant extension: documents may carry a namespace tag, and scoring can
-be scoped to one namespace — df, N, and avg_len are then computed over that
-namespace's live documents only, so a scoped query ranks exactly as it would
-against an isolated per-tenant index.  `remove(ids)` tombstones documents
-(ids keep their slots — the tid==doc-id alignment with the triple store and
-vector bank survives — but dead docs never score or surface again).
+Storage is a preallocated capacity-doubling row block (like VectorIndex):
+`add` writes into the next free slots in amortized O(1) per document, and
+the device-side arrays are cached views of the filled prefix — no O(N)
+re-stack per post-add query.
+
+Multi-tenant extension: documents may carry a namespace tag (one per call
+or one per document), and scoring can be scoped to one namespace — df, N,
+and avg_len are then computed over that namespace's live documents only, so
+a scoped query ranks exactly as it would against an isolated per-tenant
+index.  `topk_batch` scores a whole batch of scoped queries as ONE stacked
+(B, N) device op with a per-query selection mask; the single-query `topk`
+is the B == 1 case of the same code path, so batched == sequential exactly.
+`remove(ids)` tombstones documents (ids keep their slots — the row==doc-id
+alignment with the triple store and vector bank survives — but dead docs
+never score or surface again); `compact()` drops them for real and returns
+the old→new id mapping.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Tuple, Union
 
 import jax.numpy as jnp
 import numpy as np
@@ -26,109 +36,253 @@ from repro.data.tokenizer import HashTokenizer, default_tokenizer
 
 class BM25Index:
     def __init__(self, k1: float = 1.5, b: float = 0.75, max_doc_len: int = 32,
-                 tokenizer: HashTokenizer | None = None):
+                 tokenizer: HashTokenizer | None = None, capacity: int = 256):
         self.k1 = k1
         self.b = b
         self.max_doc_len = max_doc_len
         self.tokenizer = tokenizer or default_tokenizer()
-        self._doc_rows: List[np.ndarray] = []
-        self._doc_lens: List[int] = []
-        self._doc_ns: List[int] = []          # -1 == untagged/default
-        self._alive: List[bool] = []
-        self._dirty = True
-        self._docs_arr = None
-        self._lens_arr = None
+        self.n = 0
+        self._docs = np.full((capacity, max_doc_len), -1, np.int32)
+        self._lens = np.ones((capacity,), np.float32)
+        self._ns = np.full((capacity,), -1, np.int32)   # -1 == untagged
+        self._alive = np.zeros((capacity,), bool)
+        self._cached_n = -1                              # device-cache key
+        self._docs_dev = None
+        self._lens_dev = None
+
+    # -- storage -----------------------------------------------------------
+    def _grow(self, m: int) -> None:
+        need = self.n + m
+        cap = self._docs.shape[0]
+        if need <= cap:
+            return
+        while cap < need:
+            cap *= 2
+        docs = np.full((cap, self.max_doc_len), -1, np.int32)
+        docs[: self.n] = self._docs[: self.n]
+        lens = np.ones((cap,), np.float32)
+        lens[: self.n] = self._lens[: self.n]
+        ns = np.full((cap,), -1, np.int32)
+        ns[: self.n] = self._ns[: self.n]
+        alive = np.zeros((cap,), bool)
+        alive[: self.n] = self._alive[: self.n]
+        self._docs, self._lens, self._ns, self._alive = docs, lens, ns, alive
 
     def add(self, texts: Sequence[str],
-            namespace: Optional[int] = None) -> List[int]:
-        ns = -1 if namespace is None else int(namespace)
+            namespace: Union[int, Sequence[int], None] = None) -> List[int]:
+        """Append documents; `namespace` is one tag for the whole call or a
+        per-document sequence (the batched multi-tenant ingest path)."""
+        m = len(texts)
+        if np.ndim(namespace) == 0:
+            ns_per_doc = [(-1 if namespace is None else int(namespace))] * m
+        else:
+            ns_per_doc = [int(x) for x in namespace]
+            if len(ns_per_doc) != m:
+                raise ValueError(
+                    f"{len(ns_per_doc)} namespace tags for {m} documents")
+        self._grow(m)
         ids = []
-        for t in texts:
+        for t, ns in zip(texts, ns_per_doc):
             tok = self.tokenizer.encode(t)[: self.max_doc_len]
-            row = np.full((self.max_doc_len,), -1, np.int32)
-            row[: len(tok)] = tok
-            self._doc_rows.append(row)
-            self._doc_lens.append(max(1, len(tok)))
-            self._doc_ns.append(ns)
-            self._alive.append(True)
-            ids.append(len(self._doc_rows) - 1)
-        self._dirty = True
+            i = self.n
+            self._docs[i] = -1
+            self._docs[i, : len(tok)] = tok
+            self._lens[i] = max(1, len(tok))
+            self._ns[i] = ns
+            self._alive[i] = True
+            self.n += 1
+            ids.append(i)
         return ids
 
     def remove(self, ids: Sequence[int]) -> int:
         """Tombstone documents by id.  Returns #newly removed."""
-        n = 0
+        removed = 0
         for i in ids:
             i = int(i)
-            if 0 <= i < len(self._doc_rows) and self._alive[i]:
+            if 0 <= i < self.n and self._alive[i]:
                 self._alive[i] = False
-                n += 1
-        return n
+                removed += 1
+        return removed
+
+    def compact(self) -> np.ndarray:
+        """Physically drop tombstoned documents.  Returns the old→new id
+        mapping as an (n_old,) int64 array (-1 for dropped docs); the kept
+        docs keep their relative order."""
+        n_old = self.n
+        alive = self._alive[:n_old]
+        old_to_new = np.full((n_old,), -1, np.int64)
+        keep = np.where(alive)[0]
+        old_to_new[keep] = np.arange(keep.size)
+        n_new = int(keep.size)
+        cap = max(64, 1 << max(0, int(n_new - 1).bit_length()))
+        docs = np.full((cap, self.max_doc_len), -1, np.int32)
+        docs[:n_new] = self._docs[keep]
+        lens = np.ones((cap,), np.float32)
+        lens[:n_new] = self._lens[keep]
+        ns = np.full((cap,), -1, np.int32)
+        ns[:n_new] = self._ns[keep]
+        alive_new = np.zeros((cap,), bool)
+        alive_new[:n_new] = True
+        self._docs, self._lens, self._ns, self._alive = \
+            docs, lens, ns, alive_new
+        self.n = n_new
+        self._cached_n = -1
+        return old_to_new
+
+    # -- snapshot surface (see core/store.py) ------------------------------
+    def doc_array(self) -> np.ndarray:
+        return self._docs[: self.n].copy()
+
+    def len_array(self) -> np.ndarray:
+        return self._lens[: self.n].copy()
+
+    def ns_array(self) -> np.ndarray:
+        return self._ns[: self.n].copy()
+
+    def alive_array(self) -> np.ndarray:
+        return self._alive[: self.n].copy()
+
+    def load_rows(self, docs, lens, ns, alive) -> None:
+        """Bulk-load a snapshot's rows (replaces any current content)."""
+        docs = np.asarray(docs, np.int32)
+        n = docs.shape[0]
+        if docs.shape[1] != self.max_doc_len:
+            raise ValueError(f"doc width {docs.shape[1]} != "
+                             f"max_doc_len {self.max_doc_len}")
+        self.n = 0
+        self._docs = np.full((max(64, n), self.max_doc_len), -1, np.int32)
+        self._lens = np.ones((max(64, n),), np.float32)
+        self._ns = np.full((max(64, n),), -1, np.int32)
+        self._alive = np.zeros((max(64, n),), bool)
+        self._docs[:n] = docs
+        self._lens[:n] = np.asarray(lens, np.float32)
+        self._ns[:n] = np.asarray(ns, np.int32)
+        self._alive[:n] = np.asarray(alive, bool)
+        self.n = n
+        self._cached_n = -1
 
     def __len__(self):
-        return len(self._doc_rows)
+        return self.n
 
     @property
     def alive_count(self) -> int:
-        return int(sum(self._alive))
+        return int(self._alive[: self.n].sum())
 
     def _arrays(self):
-        if self._dirty:
-            self._docs_arr = jnp.asarray(np.stack(self._doc_rows)) \
-                if self._doc_rows else jnp.zeros((0, self.max_doc_len), jnp.int32)
-            self._lens_arr = jnp.asarray(np.asarray(self._doc_lens, np.float32)) \
-                if self._doc_lens else jnp.zeros((0,), jnp.float32)
-            self._dirty = False
-        return self._docs_arr, self._lens_arr
+        """Cached device views of the filled prefix — rebuilt only when
+        documents were appended, never per-query."""
+        if self._cached_n != self.n:
+            self._docs_dev = jnp.asarray(self._docs[: self.n])
+            self._lens_dev = jnp.asarray(self._lens[: self.n])
+            self._cached_n = self.n
+        return self._docs_dev, self._lens_dev
 
     def _selection(self, namespace: Optional[int]) -> np.ndarray:
         """(N,) bool: live docs, restricted to `namespace` when given."""
-        sel = np.asarray(self._alive, bool)
+        sel = self._alive[: self.n].copy()
         if namespace is not None:
-            sel = sel & (np.asarray(self._doc_ns, np.int32) == int(namespace))
+            sel &= self._ns[: self.n] == int(namespace)
         return sel
 
+    # -- scoring -----------------------------------------------------------
     def scores(self, query: str, namespace: Optional[int] = None) -> jnp.ndarray:
         """BM25 scores over all docs -> (N,) f32 (empty -> (0,)).  Docs
         outside the selection (dead, or other namespaces when `namespace` is
         given) score 0; corpus statistics (N, df, avg_len) come from the
         selection only, so scoped scores equal an isolated index's."""
-        return self._scores_sel(query, self._selection(namespace))
-
-    def _scores_sel(self, query: str, sel_np: np.ndarray) -> jnp.ndarray:
-        docs, lens = self._arrays()
-        N = docs.shape[0]
-        if N == 0:
+        if self.n == 0:
             return jnp.zeros((0,), jnp.float32)
-        n_sel = int(sel_np.sum())
-        terms = list(dict.fromkeys(self.tokenizer.encode(query)))
-        if n_sel == 0 or not terms:
-            return jnp.zeros((N,), jnp.float32)
-        lens_np = np.asarray(self._doc_lens, np.float32)
-        avg_len = float(lens_np[sel_np].mean())
-        sel = jnp.asarray(sel_np)
-        norm = self.k1 * (1.0 - self.b + self.b * lens / avg_len)
-        # per-term tf columns dispatch lazily (no host sync); stacking to
-        # (N, T) keeps peak memory at N*T instead of an N*L*T broadcast,
-        # and the df pull below is the single device sync per query
-        tf = jnp.stack([(docs == t).sum(axis=1).astype(jnp.float32)
-                        for t in terms], axis=1)                    # (N, T)
-        df = np.asarray(((tf > 0) & sel[:, None]).sum(axis=0),
-                        np.float32)                                 # (T,)
+        sel = self._selection(namespace)
+        return self._scores_batch([self._terms(query)], sel[None])[0]
+
+    def _terms(self, query: str) -> List[int]:
+        return list(dict.fromkeys(self.tokenizer.encode(query)))
+
+    def _scores_batch(self, term_lists: Sequence[List[int]],
+                      sels: np.ndarray) -> jnp.ndarray:
+        """Stacked scoring: B scoped queries against the whole corpus in one
+        device op -> (B, N) f32.  `sels` is the (B, N) per-query selection
+        mask.  Term frequencies are computed ONCE over the union of all
+        query terms and gathered per query, so the corpus is streamed once
+        for the whole batch; df/idf/avg_len stay per-query (computed over
+        each query's own selection, matching an isolated index's
+        statistics)."""
+        B = len(term_lists)
+        N = self.n
+        if N == 0:
+            return jnp.zeros((B, 0), jnp.float32)
+        docs, lens = self._arrays()
+        n_sel = sels.sum(axis=1)                                  # (B,)
+        union = list(dict.fromkeys(t for ts in term_lists for t in ts))
+        live = [b for b in range(B) if term_lists[b] and n_sel[b]]
+        if not union or not live:
+            return jnp.zeros((B, N), jnp.float32)
+        uidx = {t: i for i, t in enumerate(union)}
+        T = max(len(ts) for ts in term_lists)
+        idx = np.zeros((B, T), np.int32)
+        valid = np.zeros((B, T), np.float32)
+        for b, ts in enumerate(term_lists):
+            idx[b, : len(ts)] = [uidx[t] for t in ts]
+            valid[b, : len(ts)] = 1.0
+        # tf over the union, once for the whole batch: (N, U)
+        tf_u = jnp.stack([(docs == t).sum(axis=1).astype(jnp.float32)
+                          for t in union], axis=1)
+        G = tf_u[:, jnp.asarray(idx)]                             # (N, B, T)
+        sel_dev = jnp.asarray(sels)
+        # the single device sync per batch: per-query df over its selection
+        df = np.asarray(jnp.einsum("nbt,bn->bt",
+                                   (G > 0).astype(jnp.float32),
+                                   sel_dev.astype(jnp.float32)),
+                        np.float32) * valid                        # (B, T)
+        lens_np = self._lens[: N]
+        avg = np.asarray([float(lens_np[sels[b]].mean()) if n_sel[b] else 1.0
+                          for b in range(B)], np.float32)
+        n_sel_f = n_sel.astype(np.float32)[:, None]
         idf = np.where(df > 0,
-                       np.log(1.0 + (n_sel - df + 0.5) / (df + 0.5)), 0.0)
-        out = (jnp.asarray(idf)[None, :] * tf * (self.k1 + 1.0)
-               / (tf + norm[:, None])).sum(axis=1)
-        return jnp.where(sel, out, 0.0)
+                       np.log(1.0 + (n_sel_f - df + 0.5) / (df + 0.5)),
+                       0.0).astype(np.float32) * valid
+        norm = self.k1 * (1.0 - self.b
+                          + self.b * lens[None, :] / jnp.asarray(avg)[:, None])
+        contrib = (jnp.asarray(idf)[None, :, :] * G * (self.k1 + 1.0)
+                   / (G + jnp.swapaxes(norm, 0, 1)[:, :, None]))   # (N, B, T)
+        out = jnp.swapaxes(contrib.sum(axis=2), 0, 1)              # (B, N)
+        row_live = jnp.asarray(
+            np.asarray([bool(term_lists[b]) and bool(n_sel[b])
+                        for b in range(B)]))[:, None]
+        return jnp.where(sel_dev & row_live, out, 0.0)
 
     def topk(self, query: str, k: int, namespace: Optional[int] = None):
-        """Top-k (scores, global doc ids), restricted to the selection."""
-        sel = self._selection(namespace) if len(self._doc_rows) else \
-            np.zeros((0,), bool)
-        cand = np.where(sel)[0]
-        if cand.size == 0:
+        """Top-k (scores, global doc ids), restricted to the selection.
+        Variable-length output (<= min(k, selection size))."""
+        if self.n == 0:
             return np.zeros((0,), np.float32), np.zeros((0,), np.int64)
-        s = np.asarray(self._scores_sel(query, sel))[cand]
-        k = min(k, cand.size)
-        order = np.argsort(-s, kind="stable")[:k]
-        return s[order], cand[order]
+        s, ids = self.topk_batch([query], k, namespaces=[namespace])
+        m = ids[0] >= 0
+        return s[0][m], ids[0][m]
+
+    def topk_batch(self, queries: Sequence[str], k: int,
+                   namespaces: Optional[Sequence[Optional[int]]] = None
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+        """Batched scoped top-k: one stacked (B, N) scoring op, then a host
+        k-selection per query.  Returns (scores (B, k), ids (B, k)); slots
+        beyond a query's selection size hold (0, -1)."""
+        B = len(queries)
+        scores = np.zeros((B, k), np.float32)
+        ids = np.full((B, k), -1, np.int64)
+        if B == 0 or self.n == 0:
+            return scores, ids
+        if namespaces is None:
+            namespaces = [None] * B
+        sels = np.stack([self._selection(ns) for ns in namespaces])
+        S = np.asarray(self._scores_batch(
+            [self._terms(q) for q in queries], sels))
+        for b in range(B):
+            cand = np.where(sels[b])[0]
+            if cand.size == 0:
+                continue
+            kk = min(k, cand.size)
+            s = S[b][cand]
+            order = np.argsort(-s, kind="stable")[:kk]
+            scores[b, :kk] = s[order]
+            ids[b, :kk] = cand[order]
+        return scores, ids

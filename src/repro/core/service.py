@@ -6,7 +6,17 @@ namespaces, and the amortization that makes that affordable on TPU is
 *batching*: pending queries across tenants are embedded in ONE
 `embed_texts` call and scored in ONE namespace-masked `topk_mips` launch
 against a packed multi-tenant bank (per-row namespace ids; cross-namespace
-hits masked to NEG_INF before the top-k merge — kernels/topk_mips.py).
+hits masked to NEG_INF before the top-k merge — kernels/topk_mips.py), and
+the sparse side is ONE stacked (B, N) BM25 scoring op with per-query
+namespace masks.  Writes amortize the same way: `enqueue()` queues sessions
+for free and `flush()` ingests everything pending across all tenants
+through one `embed_texts` call and one bank append (`record()` is the
+synchronous enqueue-then-flush).
+
+Storage — the packed bank, the BM25 corpus, the per-tenant triple/summary
+stores and the row↔namespace↔triple mapping — lives in `core/store.py`'s
+MemoryStore, which also provides `compact()` (tombstone reclamation with
+row-id remapping) and `snapshot()` / `MemoryService.restore()` persistence.
 
 Isolation invariants:
   * a triple recorded under namespace A can never surface for namespace B
@@ -14,74 +24,83 @@ Isolation invariants:
   * `retrieve_batch([(ns, q), ...])` returns results identical to the same
     retrieves issued sequentially (asserted in tests/test_service.py);
   * tombstoned rows (evict / evict_superseded) never surface again, and
-    their vectors are physically zeroed.
+    their vectors are physically zeroed (compact() then reclaims them).
 
 `namespace(name)` returns a MemoriMemory-compatible view, so MemoriClient
 and the serving launchers run against the service unchanged.
 """
 from __future__ import annotations
 
-import dataclasses
 import warnings
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.bm25 import BM25Index
 from repro.core.budget import TokenBudgeter
-from repro.core.extraction import Extractor, Message, RuleExtractor
+from repro.core.extraction import Extractor, Message
 from repro.core.hybrid import rrf_fuse
 from repro.core.memory import ANSWER_PROMPT, MemoriMemory, RetrievedContext
-from repro.core.summaries import Summary, SummaryStore
-from repro.core.triples import Triple, TripleStore
-from repro.core.vector_index import VectorIndex
-from repro.data.tokenizer import HashTokenizer, default_tokenizer
-
-
-@dataclasses.dataclass
-class _Tenant:
-    """Per-namespace state.  Bank rows and BM25 doc ids share one global id
-    space (row == doc id); `rows[local_tid] -> global row` maps back."""
-    ns_id: int
-    triples: TripleStore = dataclasses.field(default_factory=TripleStore)
-    summaries: SummaryStore = dataclasses.field(default_factory=SummaryStore)
-    rows: List[int] = dataclasses.field(default_factory=list)
-    evicted: Set[int] = dataclasses.field(default_factory=set)  # local tids
+from repro.core.store import MemoryStore
+from repro.core.summaries import Summary
+from repro.core.triples import Triple
+from repro.data.tokenizer import HashTokenizer
 
 
 class MemoryService:
-    def __init__(self, embedder, extractor: Optional[Extractor] = None,
+    def __init__(self, embedder=None, extractor: Optional[Extractor] = None,
                  dim: int = 256, budget: int = 1300, top_k: int = 10,
                  tokenizer: HashTokenizer | None = None,
                  use_kernel: bool = True,
                  dense_weight: float = 1.0, sparse_weight: float = 0.7,
-                 pool: int = 64):
-        self.embedder = embedder
-        self.extractor = extractor or RuleExtractor()
-        self.tokenizer = tokenizer or default_tokenizer()
+                 pool: int = 64, flush_every: Optional[int] = None,
+                 store: Optional[MemoryStore] = None):
+        if store is None:
+            if embedder is None:
+                raise ValueError("MemoryService needs an embedder or a store")
+            store = MemoryStore(embedder, extractor, dim=dim,
+                                use_kernel=use_kernel, tokenizer=tokenizer)
+        self.store = store
+        self.embedder = store.embedder
+        self.extractor = store.extractor
+        self.tokenizer = store.tokenizer
         self.budgeter = TokenBudgeter(budget=budget, tokenizer=self.tokenizer)
         self.top_k = top_k
         self.dense_weight = dense_weight
         self.sparse_weight = sparse_weight
         self.pool = pool
-        self.vindex = VectorIndex(dim=dim, use_kernel=use_kernel)
-        self.bm25 = BM25Index(tokenizer=self.tokenizer)
-        self._tenants: Dict[str, _Tenant] = {}
-        self._ns_ids: Dict[str, int] = {}      # survives evict(): tombstoned
-        #                                        rows keep a retired ns id
-        self._row_ns: List[int] = []           # global row -> namespace id
-        self._row_tid: List[int] = []          # global row -> local tid
+        self.flush_every = flush_every
+
+    # the underlying indices, exposed for tests/benchmarks and the SDK
+    @property
+    def vindex(self):
+        return self.store.vindex
+
+    @property
+    def bm25(self):
+        return self.store.bm25
+
+    # -- persistence -------------------------------------------------------
+    @classmethod
+    def restore(cls, path: str, embedder,
+                extractor: Optional[Extractor] = None,
+                use_kernel: bool = True,
+                tokenizer: HashTokenizer | None = None,
+                **service_kwargs) -> "MemoryService":
+        """Rebuild a service from `snapshot(path)`: the restored service
+        answers `retrieve_batch` identically to the one that wrote it."""
+        store = MemoryStore.restore(path, embedder, extractor=extractor,
+                                    use_kernel=use_kernel,
+                                    tokenizer=tokenizer)
+        return cls(store=store, **service_kwargs)
+
+    def snapshot(self, path: str) -> int:
+        """Flush pending writes, then persist the whole store.  Returns
+        bytes written."""
+        return self.store.snapshot(path)
 
     # -- tenancy -----------------------------------------------------------
-    def _tenant(self, namespace: str) -> _Tenant:
-        t = self._tenants.get(namespace)
-        if t is None:
-            ns_id = self._ns_ids.setdefault(namespace, len(self._ns_ids))
-            t = self._tenants[namespace] = _Tenant(ns_id=ns_id)
-        return t
-
     def namespaces(self) -> List[str]:
-        return list(self._tenants)
+        return self.store.namespaces()
 
     def namespace(self, name: str) -> "NamespaceView":
         return NamespaceView(self, name)
@@ -89,25 +108,27 @@ class MemoryService:
     # -- write path ----------------------------------------------------------
     def record(self, namespace: str, session_id: str,
                messages: Sequence[Message]) -> Tuple[List[Triple], Summary]:
-        """Ingest one session for one tenant: extract triples + summary,
-        embed in one call, append to the packed bank / scoped BM25."""
-        t = self._tenant(namespace)
-        triples, summary = self.extractor.extract(namespace, session_id,
-                                                  messages)
-        t.summaries.add(summary)
-        if triples:
-            texts = [tr.text() for tr in triples]
-            vecs = self.embedder.embed_texts(texts)
-            rows = self.vindex.add(vecs)
-            bids = self.bm25.add(texts, namespace=t.ns_id)
-            for tr, row, bid in zip(triples, rows, bids):
-                tid = t.triples.add(tr)
-                # global row, BM25 doc id and row-table slots stay aligned
-                assert int(row) == int(bid) == len(self._row_ns)
-                t.rows.append(int(row))
-                self._row_ns.append(t.ns_id)
-                self._row_tid.append(tid)
-        return triples, summary
+        """Synchronous ingest of one session: enqueue + flush (one write
+        path — anything else pending is drained in the same batch)."""
+        return self.store.ingest(namespace, session_id, messages)
+
+    def enqueue(self, namespace: str, session_id: str,
+                messages: Sequence[Message]) -> None:
+        """Async ingest: queue the session for the next `flush()`.  No
+        extraction or embedding happens here.  When `flush_every` is set,
+        reaching that many pending sessions triggers an automatic flush."""
+        self.store.enqueue(namespace, session_id, messages)
+        if self.flush_every and self.store.pending_count >= self.flush_every:
+            self.flush()
+
+    def flush(self) -> int:
+        """Drain all pending sessions (all tenants) through one embed call
+        and one bank append.  Returns the number of sessions ingested."""
+        return len(self.store.flush())
+
+    def compact(self) -> dict:
+        """Reclaim tombstoned rows (see MemoryStore.compact)."""
+        return self.store.compact()
 
     # -- read path -------------------------------------------------------------
     def retrieve(self, namespace: str, query: str,
@@ -119,26 +140,39 @@ class MemoryService:
         """[(namespace, query), ...] -> per-request RetrievedContext.
 
         The cross-tenant hot path: one embed_texts call for every pending
-        query, one masked topk_mips launch against the packed bank.  The
+        query, one masked topk_mips launch against the packed bank, one
+        stacked BM25 scoring op for the sparse side.  Reads are
+        read-your-writes: pending enqueued sessions are flushed first.  The
         per-request results are identical to sequential retrieve() calls."""
         if not requests:
             return []
+        if self.store.pending_count:
+            self.store.flush()
         k = top_k or self.top_k
         # reads never allocate tenant state: unknown namespaces stay unknown
         # (no leak from typo'd/adversarial queries, evict() stays evicted)
-        tenants = [self._tenants.get(ns) for ns, _ in requests]
+        tenants = [self.store.get(ns) for ns, _ in requests]
         qvecs = self.embedder.embed_texts([q for _, q in requests])
+        vindex = self.store.vindex
         dense_ids = None
-        if self.vindex.n and self.vindex.n_alive:
+        if vindex.n and vindex.n_alive:
             # unknown tenants get a never-assigned ns id (>= 0, so it can't
             # collide with the -1 tombstone label): they match no bank row
-            unused = len(self._ns_ids)
+            unused = self.store.namespace_id_count()
             q_ns = np.asarray([t.ns_id if t else unused for t in tenants],
                               np.int32)
-            row_ns = np.asarray(self._row_ns, np.int32)
-            pool = min(self.pool, self.vindex.n)
-            _, dense_ids = self.vindex.search_masked(qvecs, q_ns, row_ns,
-                                                     k=pool)
+            row_ns = self.store.row_namespaces()
+            pool = min(self.pool, vindex.n)
+            _, dense_ids = vindex.search_masked(qvecs, q_ns, row_ns, k=pool)
+        # sparse side: every known tenant's query in ONE stacked scoring op
+        known = [r for r, t in enumerate(tenants) if t is not None]
+        sparse_ranks = {}
+        if known:
+            _, sp_ids = self.store.bm25.topk_batch(
+                [requests[r][1] for r in known], k=self.pool,
+                namespaces=[tenants[r].ns_id for r in known])
+            for j, r in enumerate(known):
+                sparse_ranks[r] = [int(i) for i in sp_ids[j] if i >= 0]
         out: List[RetrievedContext] = []
         for r, ((ns, qtext), t) in enumerate(zip(requests, tenants)):
             if t is None:
@@ -148,12 +182,9 @@ class MemoryService:
                 continue
             dense_rank = [] if dense_ids is None else \
                 [int(i) for i in dense_ids[r] if i >= 0]
-            _, sparse_ids = self.bm25.topk(qtext, k=self.pool,
-                                           namespace=t.ns_id)
-            sparse_rank = [int(i) for i in sparse_ids]
-            fused = rrf_fuse([dense_rank, sparse_rank],
+            fused = rrf_fuse([dense_rank, sparse_ranks[r]],
                              weights=[self.dense_weight, self.sparse_weight])
-            scored = [(t.triples.get(self._row_tid[g]), score)
+            scored = [(t.triples.get(self.store.row_tid(g)), score)
                       for g, score in fused[:k]]
             ctx = self.budgeter.select(scored, t.summaries)
             text = MemoriMemory.render(ctx.triples, ctx.summaries)
@@ -171,46 +202,25 @@ class MemoryService:
     def evict(self, namespace: str) -> int:
         """Drop a whole tenant: tombstone its bank rows + BM25 docs, free its
         stores.  Returns the number of rows evicted."""
-        t = self._tenants.pop(namespace, None)
-        if t is None:
-            return 0
-        live = [row for tid, row in enumerate(t.rows) if tid not in t.evicted]
-        self.vindex.delete(live)
-        self.bm25.remove(live)
-        return len(live)
+        return self.store.evict_namespace(namespace)
 
     def evict_superseded(self, namespace: str) -> int:
         """Physically evict triples superseded under conflict resolution
         (triples.latest_for_key keeps the newest version of every
         (subject, predicate) key; the older versions leave the indices)."""
-        t = self._tenants.get(namespace)
-        if t is None:
-            return 0
-        fresh = [tid for tid in t.triples.superseded_ids()
-                 if tid not in t.evicted]
-        rows = [t.rows[tid] for tid in fresh]
-        self.vindex.delete(rows)
-        self.bm25.remove(rows)
-        t.evicted.update(fresh)
-        return len(fresh)
+        return self.store.evict_superseded(namespace)
 
     # -- stats ----------------------------------------------------------------------
     def stats(self) -> dict:
-        per_ns = {
-            ns: {
-                "triples": len(t.triples),
-                "summaries": len(t.summaries),
-                "evicted": len(t.evicted),
-            } for ns, t in self._tenants.items()
-        }
-        return {
-            "namespaces": len(self._tenants),
-            "bank_rows": self.vindex.n,
-            "alive_rows": self.vindex.n_alive,
-            "tombstones": self.vindex.n_dead,
-            "bm25_docs": len(self.bm25),
-            "per_namespace": per_ns,
-        }
+        return self.store.stats()
+
+    def namespace_stats(self, namespace: str) -> dict:
+        """Public per-namespace counters (no reaching into tenant state)."""
+        t = self.store.get(namespace)
+        if t is None:
+            return {"triples": 0, "summaries": 0, "evicted": 0}
+        return {"triples": len(t.triples), "summaries": len(t.summaries),
+                "evicted": len(t.evicted)}
 
 
 class NamespaceView:
@@ -239,6 +249,11 @@ class NamespaceView:
                 "both record into the same namespace scope — use "
                 f"service.namespace({conversation_id!r}) for a separate "
                 "scope.", stacklevel=2)
+        if self.service.flush_every:
+            # async batched ingestion: buffer until flush_every sessions are
+            # pending (reads still see them — retrieve flushes first).  No
+            # extraction happens yet, so there is no per-session result.
+            return self.service.enqueue(self.namespace, session_id, messages)
         return self.service.record(self.namespace, session_id, messages)
 
     def retrieve(self, query: str,
@@ -249,8 +264,4 @@ class NamespaceView:
         return self.service.answer_prompt(self.namespace, question)
 
     def stats(self) -> dict:
-        t = self.service._tenants.get(self.namespace)
-        if t is None:
-            return {"triples": 0, "summaries": 0, "evicted": 0}
-        return {"triples": len(t.triples), "summaries": len(t.summaries),
-                "evicted": len(t.evicted)}
+        return self.service.namespace_stats(self.namespace)

@@ -1,0 +1,355 @@
+"""MemoryStore — the unified storage engine under the memory layer.
+
+Before this module existed, the packed vector bank, the BM25 corpus, the
+per-tenant triple/summary stores and the row↔namespace↔triple mapping were
+aligned parallel structures scattered across `core/service.py` and
+`core/augmentation.py`, held together by raw asserts.  MemoryStore owns all
+of them as ONE consistent unit with three subsystems the scattered version
+could not support:
+
+* **async batched ingestion** — `enqueue()` is cheap (no extraction, no
+  embedding); `flush()` drains every pending session across *all* tenants
+  through ONE `embed_texts` call and ONE bank append, mirroring how
+  `MemoryService.retrieve_batch` amortizes reads.  `ingest()` is the
+  synchronous path (enqueue + flush).
+* **bank compaction** — `compact()` rebuilds the packed bank dropping
+  tombstoned rows and remaps global row ids in the row tables, the BM25
+  corpus and every tenant's `rows` list, so long-lived services stop
+  leaking memory after `evict` / `evict_superseded`.
+* **snapshot/restore persistence** — `snapshot(path)` serializes the bank,
+  BM25 arrays, triples, summaries and namespace tables through
+  `checkpoint/io.py`; `MemoryStore.restore(path, embedder)` reconstructs a
+  store whose retrieval results are bit-identical to the writer's.
+
+Layout invariant (checked, raising StoreInvariantError — not asserted):
+global row id == BM25 doc id == position in the row tables; tenant-local
+`rows[tid]` maps a triple id back to its global row (-1 once compacted
+away).  See docs/STORAGE.md for the full layout and remapping rules.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import msgpack
+import numpy as np
+
+from repro.checkpoint import io as ckpt_io
+from repro.core.bm25 import BM25Index
+from repro.core.extraction import Extractor, Message, RuleExtractor
+from repro.core.summaries import Summary, SummaryStore
+from repro.core.triples import Triple, TripleStore
+from repro.core.vector_index import VectorIndex
+from repro.data.tokenizer import HashTokenizer, default_tokenizer
+
+SNAPSHOT_VERSION = 1
+
+
+class StoreInvariantError(RuntimeError):
+    """A storage-layer alignment invariant was violated (row id / doc id /
+    row-table drift).  A real exception — unlike the asserts it replaces,
+    it does not vanish under ``python -O``."""
+
+
+@dataclasses.dataclass
+class TenantState:
+    """Per-namespace state.  Bank rows and BM25 doc ids share one global id
+    space (row == doc id); `rows[local_tid] -> global row` maps back
+    (-1 after the row was tombstoned and compacted away)."""
+    ns_id: int
+    triples: TripleStore = dataclasses.field(default_factory=TripleStore)
+    summaries: SummaryStore = dataclasses.field(default_factory=SummaryStore)
+    rows: List[int] = dataclasses.field(default_factory=list)
+    evicted: Set[int] = dataclasses.field(default_factory=set)  # local tids
+
+
+@dataclasses.dataclass
+class PendingSession:
+    namespace: str
+    conversation_id: str
+    session_id: str
+    messages: List[Message]
+
+
+class MemoryStore:
+    def __init__(self, embedder, extractor: Optional[Extractor] = None,
+                 dim: int = 256, use_kernel: bool = True,
+                 tokenizer: HashTokenizer | None = None):
+        self.embedder = embedder
+        self.extractor = extractor or RuleExtractor()
+        self.tokenizer = tokenizer or default_tokenizer()
+        self.dim = dim
+        self.use_kernel = use_kernel
+        self.vindex = VectorIndex(dim=dim, use_kernel=use_kernel)
+        self.bm25 = BM25Index(tokenizer=self.tokenizer)
+        self._tenants: Dict[str, TenantState] = {}
+        self._ns_ids: Dict[str, int] = {}      # survives evict(): tombstoned
+        #                                        rows keep a retired ns id
+        self._row_ns: List[int] = []           # global row -> namespace id
+        self._row_tid: List[int] = []          # global row -> local tid
+        self._pending: List[PendingSession] = []
+
+    # -- tenancy -----------------------------------------------------------
+    def tenant(self, namespace: str) -> TenantState:
+        """Create-or-get a tenant (the write path)."""
+        t = self._tenants.get(namespace)
+        if t is None:
+            ns_id = self._ns_ids.setdefault(namespace, len(self._ns_ids))
+            t = self._tenants[namespace] = TenantState(ns_id=ns_id)
+        return t
+
+    def get(self, namespace: str) -> Optional[TenantState]:
+        """Get without creating (the read path: unknown stays unknown)."""
+        return self._tenants.get(namespace)
+
+    def namespaces(self) -> List[str]:
+        return list(self._tenants)
+
+    def namespace_id_count(self) -> int:
+        """Number of namespace ids ever assigned (a fresh id >= this count
+        can never collide with any bank row's label)."""
+        return len(self._ns_ids)
+
+    def row_namespaces(self) -> np.ndarray:
+        """(n,) int32: every bank row's namespace id."""
+        return np.asarray(self._row_ns, np.int32)
+
+    def row_tid(self, row: int) -> int:
+        return self._row_tid[row]
+
+    # -- write path: async batched ingestion -------------------------------
+    def enqueue(self, namespace: str, session_id: str,
+                messages: Sequence[Message],
+                conversation_id: Optional[str] = None) -> None:
+        """Cheap: no extraction, no embedding — just queue the session.
+        `conversation_id` defaults to the namespace (the service's shape);
+        a single-tenant wrapper may scope several conversations under one
+        namespace by passing it explicitly."""
+        self._pending.append(PendingSession(
+            namespace=namespace,
+            conversation_id=conversation_id if conversation_id is not None
+            else namespace,
+            session_id=session_id, messages=list(messages)))
+
+    @property
+    def pending_count(self) -> int:
+        return len(self._pending)
+
+    def flush(self) -> List[Tuple[str, List[Triple], Summary]]:
+        """Drain every pending session across all tenants: extraction runs
+        per session, but all new triples go through ONE `embed_texts` call,
+        ONE bank append and ONE BM25 append.  Returns per-session
+        (namespace, triples, summary) in enqueue order.
+
+        All-or-nothing: extraction and embedding (the phases running
+        caller-supplied code) touch no store state — if either raises, the
+        queue is restored intact and nothing is committed (no orphaned
+        summaries, no partial batch).  The commit phase only mutates the
+        store's own structures."""
+        if not self._pending:
+            return []
+        pending, self._pending = self._pending, []
+        try:
+            batch = []                   # (session, triples, summary)
+            for p in pending:
+                triples, summary = self.extractor.extract(
+                    p.conversation_id, p.session_id, p.messages)
+                batch.append((p, triples, summary))
+            flat = [(p, tr) for p, triples, _ in batch for tr in triples]
+            vecs = self.embedder.embed_texts(                # ONE embed call
+                [tr.text() for _, tr in flat]) if flat else None
+        except BaseException:
+            # restore the queue (ahead of anything enqueued concurrently)
+            self._pending = pending + self._pending
+            raise
+        # commit phase: only the store's own structures from here on
+        for p, triples, summary in batch:
+            self.tenant(p.namespace).summaries.add(summary)
+        if flat:
+            tenants = [self.tenant(p.namespace) for p, _ in flat]
+            rows = self.vindex.add(vecs)                     # ONE bank append
+            bids = self.bm25.add([tr.text() for _, tr in flat],
+                                 namespace=[t.ns_id for t in tenants])
+            for t, (_, tr), row, bid in zip(tenants, flat, rows, bids):
+                if not (int(row) == int(bid) == len(self._row_ns)):
+                    raise StoreInvariantError(
+                        f"write-path alignment drift: bank row {int(row)}, "
+                        f"BM25 doc {int(bid)}, row table size "
+                        f"{len(self._row_ns)} must all be equal")
+                tid = t.triples.add(tr)
+                t.rows.append(int(row))
+                self._row_ns.append(t.ns_id)
+                self._row_tid.append(tid)
+        return [(p.namespace, triples, summary)
+                for p, triples, summary in batch]
+
+    def ingest(self, namespace: str, session_id: str,
+               messages: Sequence[Message],
+               conversation_id: Optional[str] = None
+               ) -> Tuple[List[Triple], Summary]:
+        """Synchronous write: enqueue + flush (drains anything else pending
+        too — there is exactly one write path).  Returns this session's
+        extraction result."""
+        self.enqueue(namespace, session_id, messages,
+                     conversation_id=conversation_id)
+        _, triples, summary = self.flush()[-1]
+        return triples, summary
+
+    # -- eviction ----------------------------------------------------------
+    def evict_namespace(self, namespace: str) -> int:
+        """Drop a whole tenant: tombstone its bank rows + BM25 docs, free
+        its stores.  Returns the number of rows evicted."""
+        self._pending = [p for p in self._pending
+                         if p.namespace != namespace]
+        t = self._tenants.pop(namespace, None)
+        if t is None:
+            return 0
+        live = [row for tid, row in enumerate(t.rows)
+                if tid not in t.evicted and row >= 0]
+        self.vindex.delete(live)
+        self.bm25.remove(live)
+        return len(live)
+
+    def evict_superseded(self, namespace: str) -> int:
+        """Physically evict triples superseded under conflict resolution
+        (triples.latest_for_key keeps the newest version of every
+        (subject, predicate) key; the older versions leave the indices)."""
+        t = self._tenants.get(namespace)
+        if t is None:
+            return 0
+        fresh = [tid for tid in t.triples.superseded_ids()
+                 if tid not in t.evicted]
+        rows = [t.rows[tid] for tid in fresh]
+        self.vindex.delete([r for r in rows if r >= 0])
+        self.bm25.remove([r for r in rows if r >= 0])
+        t.evicted.update(fresh)
+        return len(fresh)
+
+    # -- compaction --------------------------------------------------------
+    def compact(self) -> dict:
+        """Rebuild the packed bank dropping tombstoned rows and remap every
+        global row id: the row tables, the BM25 corpus and each tenant's
+        `rows` list all move together (rows of compacted-away triples become
+        -1).  Pending sessions are flushed first so the mapping is total.
+        Retrieval results are unchanged (asserted in tests)."""
+        self.flush()
+        before = self.vindex.n
+        old_to_new = self.vindex.compact()
+        bm_map = self.bm25.compact()
+        if not np.array_equal(old_to_new, bm_map):
+            raise StoreInvariantError(
+                "compaction drift: the vector bank and the BM25 corpus "
+                "disagree on which rows are tombstoned")
+        keep = old_to_new >= 0
+        self._row_ns = [ns for ns, k in zip(self._row_ns, keep) if k]
+        self._row_tid = [tid for tid, k in zip(self._row_tid, keep) if k]
+        for t in self._tenants.values():
+            t.rows = [int(old_to_new[r]) if r >= 0 else -1 for r in t.rows]
+        return {"rows_before": int(before), "rows_after": int(self.vindex.n),
+                "dropped": int(before - self.vindex.n)}
+
+    # -- persistence -------------------------------------------------------
+    def snapshot(self, path: str) -> int:
+        """Serialize the full store state through checkpoint/io.py.
+        Pending sessions are flushed first: a snapshot always captures a
+        consistent, fully-indexed state (crash consistency is
+        at-last-snapshot granularity — see docs/STORAGE.md).  Returns bytes
+        written."""
+        self.flush()
+        n = self.vindex.n
+        meta = {
+            "version": SNAPSHOT_VERSION,
+            "dim": self.dim,
+            "bm25": {"k1": self.bm25.k1, "b": self.bm25.b,
+                     "max_doc_len": self.bm25.max_doc_len},
+            "ns_ids": dict(self._ns_ids),
+            "tenants": {
+                ns: {
+                    "ns_id": t.ns_id,
+                    "rows": [int(r) for r in t.rows],
+                    "evicted": sorted(t.evicted),
+                    "triples": [dataclasses.asdict(tr)
+                                for tr in t.triples.all()],
+                    "summaries": [dataclasses.asdict(s)
+                                  for s in t.summaries.all()],
+                } for ns, t in self._tenants.items()
+            },
+        }
+        blob = np.frombuffer(msgpack.packb(meta, use_bin_type=True),
+                             np.uint8)
+        arrays = {
+            "bank": self.vindex.bank.copy(),
+            "bank_alive": self.vindex.alive(),
+            "row_ns": np.asarray(self._row_ns, np.int32),
+            "row_tid": np.asarray(self._row_tid, np.int32),
+            "bm25_docs": self.bm25.doc_array(),
+            "bm25_lens": self.bm25.len_array(),
+            "bm25_ns": self.bm25.ns_array(),
+            "bm25_alive": self.bm25.alive_array(),
+            "meta": blob,
+        }
+        if arrays["row_ns"].shape != (n,) or arrays["row_tid"].shape != (n,):
+            raise StoreInvariantError(
+                f"snapshot: row tables ({arrays['row_ns'].shape[0]}) out of "
+                f"sync with the bank ({n})")
+        return ckpt_io.save(path, arrays)
+
+    @classmethod
+    def restore(cls, path: str, embedder,
+                extractor: Optional[Extractor] = None,
+                use_kernel: bool = True,
+                tokenizer: HashTokenizer | None = None) -> "MemoryStore":
+        """Reconstruct a store from `snapshot(path)`.  The result answers
+        retrieval bit-identically to the store that wrote the snapshot
+        (same bank bytes, same BM25 arrays, same triple/summary text)."""
+        arrays = ckpt_io.load_raw(path)
+        meta = msgpack.unpackb(arrays["meta"].tobytes(), raw=False)
+        if meta["version"] != SNAPSHOT_VERSION:
+            raise StoreInvariantError(
+                f"snapshot version {meta['version']} != {SNAPSHOT_VERSION}")
+        store = cls(embedder, extractor, dim=int(meta["dim"]),
+                    use_kernel=use_kernel, tokenizer=tokenizer)
+        store.vindex.load_rows(arrays["bank"], arrays["bank_alive"])
+        bm = meta["bm25"]
+        store.bm25.k1, store.bm25.b = float(bm["k1"]), float(bm["b"])
+        store.bm25.max_doc_len = int(bm["max_doc_len"])
+        store.bm25.load_rows(arrays["bm25_docs"], arrays["bm25_lens"],
+                             arrays["bm25_ns"], arrays["bm25_alive"])
+        store._row_ns = [int(x) for x in arrays["row_ns"]]
+        store._row_tid = [int(x) for x in arrays["row_tid"]]
+        store._ns_ids = {str(k): int(v) for k, v in meta["ns_ids"].items()}
+        for ns, td in meta["tenants"].items():
+            t = TenantState(ns_id=int(td["ns_id"]))
+            for trd in td["triples"]:
+                t.triples.add(Triple(**trd))
+            for sd in td["summaries"]:
+                t.summaries.add(Summary(**sd))
+            t.rows = [int(r) for r in td["rows"]]
+            t.evicted = set(int(i) for i in td["evicted"])
+            store._tenants[str(ns)] = t
+        if len(store._row_ns) != store.vindex.n or \
+                store.vindex.n != len(store.bm25):
+            raise StoreInvariantError(
+                f"restore: bank ({store.vindex.n}), BM25 "
+                f"({len(store.bm25)}) and row tables "
+                f"({len(store._row_ns)}) disagree")
+        return store
+
+    # -- stats -------------------------------------------------------------
+    def stats(self) -> dict:
+        per_ns = {
+            ns: {
+                "triples": len(t.triples),
+                "summaries": len(t.summaries),
+                "evicted": len(t.evicted),
+            } for ns, t in self._tenants.items()
+        }
+        return {
+            "namespaces": len(self._tenants),
+            "bank_rows": self.vindex.n,
+            "alive_rows": self.vindex.n_alive,
+            "tombstones": self.vindex.n_dead,
+            "bm25_docs": len(self.bm25),
+            "pending": len(self._pending),
+            "per_namespace": per_ns,
+        }

@@ -78,6 +78,39 @@ class VectorIndex:
         self._bank[ids] = 0.0
         return int(ids.size)
 
+    def compact(self) -> np.ndarray:
+        """Physically drop tombstoned rows, repacking the bank (and shrinking
+        its capacity to the next power of two).  Returns the old→new row id
+        mapping as an (n_old,) int64 array (-1 for dropped rows); kept rows
+        keep their relative order.  Callers owning row-aligned side tables
+        (see core/store.py) must remap them with the returned array."""
+        n_old = self.n
+        alive = self._alive[:n_old]
+        old_to_new = np.full((n_old,), -1, np.int64)
+        keep = np.where(alive)[0]
+        old_to_new[keep] = np.arange(keep.size)
+        n_new = int(keep.size)
+        cap = max(64, 1 << max(0, int(n_new - 1).bit_length()))
+        bank = np.zeros((cap, self.dim), np.float32)
+        bank[:n_new] = self._bank[keep]
+        self._bank = bank
+        self._alive = np.ones((cap,), bool)
+        self.n = n_new
+        return old_to_new
+
+    def load_rows(self, bank, alive) -> None:
+        """Bulk-load a snapshot's rows (replaces any current content)."""
+        bank = np.asarray(bank, np.float32)
+        n = bank.shape[0]
+        if bank.ndim != 2 or bank.shape[1] != self.dim:
+            raise ValueError(f"bank shape {bank.shape} != (*, {self.dim})")
+        cap = max(64, 1 << max(0, int(n - 1).bit_length()))
+        self._bank = np.zeros((cap, self.dim), np.float32)
+        self._bank[:n] = bank
+        self._alive = np.ones((cap,), bool)
+        self._alive[:n] = np.asarray(alive, bool)
+        self.n = n
+
     def search(self, queries, k: int) -> Tuple[np.ndarray, np.ndarray]:
         """queries (Q, D) -> (scores (Q, k), ids (Q, k)); ids == -1 beyond n.
         Tombstoned rows never appear: with any dead rows the search routes

@@ -3,6 +3,14 @@ the Memori memory layer in front.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b [--multipod]
     PYTHONPATH=src python -m repro.launch.serve --host-demo
+    PYTHONPATH=src python -m repro.launch.serve --host-demo \
+        --snapshot-path /tmp/memori.snap --flush-interval 8
+
+`--snapshot-path` makes the memory layer durable: the service restores from
+the snapshot on boot (a restarted server answers identically to the one
+that wrote it) and writes a fresh snapshot on shutdown.  `--flush-interval`
+switches ingestion to the async batched path: sessions are enqueued and
+flushed through one embed call per N pending sessions.
 """
 import argparse
 import os
@@ -14,6 +22,13 @@ def main():
     ap.add_argument("--multipod", action="store_true")
     ap.add_argument("--host-demo", action="store_true")
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--snapshot-path", default=None,
+                    help="restore the memory store from this snapshot on "
+                         "boot (if it exists) and write it back on shutdown")
+    ap.add_argument("--flush-interval", type=int, default=None,
+                    help="auto-flush pending sessions once this many are "
+                         "queued (async batched ingestion); default: "
+                         "synchronous record")
     args = ap.parse_args()
 
     if args.host_demo:
@@ -39,8 +54,17 @@ def main():
     engine = Engine(model, params, max_len=args.max_len, slots=2,
                     sampler=SamplerConfig(temperature=0.8, top_k=40),
                     tokenizer=tok)
-    # one multi-tenant service fronts every conversation on this host
-    service = MemoryService(HashEmbedder(), budget=800, use_kernel=False)
+    # one multi-tenant service fronts every conversation on this host;
+    # with --snapshot-path it picks up exactly where the last run stopped
+    if args.snapshot_path and os.path.exists(args.snapshot_path):
+        service = MemoryService.restore(
+            args.snapshot_path, HashEmbedder(), use_kernel=False,
+            budget=800, flush_every=args.flush_interval)
+        print(f"restored memory store from {args.snapshot_path}: "
+              f"{service.stats()}")
+    else:
+        service = MemoryService(HashEmbedder(), budget=800, use_kernel=False,
+                                flush_every=args.flush_interval)
     llm = lambda p: engine.generate([p[-500:]], max_new_tokens=12)[0]  # noqa: E731
     client = MemoriClient(llm, service.namespace("u0/demo"))
 
@@ -50,6 +74,9 @@ def main():
     print(f"retrieved {len(ctx.triples)} triples, {ctx.token_count} tokens")
     print("service:", service.stats())
     print("engine:", engine.stats)
+    if args.snapshot_path:
+        n = service.snapshot(args.snapshot_path)
+        print(f"snapshot: wrote {n} bytes -> {args.snapshot_path}")
 
 
 if __name__ == "__main__":

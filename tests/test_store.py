@@ -1,0 +1,394 @@
+"""MemoryStore storage engine: async batched ingestion (flush == one embed
+call), bank compaction (row-id remapping, retrieval unchanged), and
+snapshot/restore persistence (bit-identical retrieval), plus the BM25
+batched-scoring and capacity-growth paths underneath."""
+import numpy as np
+import pytest
+
+from repro.core import (MemoryService, MemoryStore, Message,
+                        StoreInvariantError)
+from repro.core.bm25 import BM25Index
+from repro.core.embedder import HashEmbedder
+from repro.core.vector_index import VectorIndex
+
+
+class CountingEmbedder(HashEmbedder):
+    """HashEmbedder that counts embed_texts calls (the flush invariant)."""
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.calls = 0
+
+    def embed_texts(self, texts):
+        self.calls += 1
+        return super().embed_texts(texts)
+
+
+def _svc(emb=None, **kw):
+    kw.setdefault("use_kernel", False)
+    return MemoryService(emb or HashEmbedder(), **kw)
+
+
+def _session(texts, speaker="Caroline", ts=1700000000.0):
+    return [Message(speaker, t, ts) for t in texts]
+
+
+def _fill(svc):
+    svc.record("alice/c0", "s0", _session(
+        ["I work as a botanist and I live in Tallinn.",
+         "I adopted a hedgehog named Biscuit."], speaker="Alice"))
+    svc.record("bob/c0", "s0", _session(
+        ["I work as a welder and I live in Porto.",
+         "I adopted a parrot named Olive."], speaker="Bob"))
+    svc.record("carol/c0", "s0", _session(
+        ["I work as a pilot and I live in Cusco."], speaker="Carol"))
+    return svc
+
+
+QUERIES = [("alice/c0", "Which city does the user live in?"),
+           ("bob/c0", "Which city does the user live in?"),
+           ("carol/c0", "What is the user's job?"),
+           ("alice/c0", "What pet was adopted?"),
+           ("mallory/c0", "anything at all?")]
+
+
+def _contexts_equal(got, want):
+    assert len(got) == len(want)
+    for g, w in zip(got, want):
+        assert [t.text() for t in g.triples] == [t.text() for t in w.triples]
+        assert [s.render() for s in g.summaries] == \
+            [s.render() for s in w.summaries]
+        assert g.text == w.text
+        assert g.token_count == w.token_count
+
+
+# -- async batched ingestion ---------------------------------------------------
+
+def test_flush_of_pending_sessions_is_one_embed_call():
+    emb = CountingEmbedder()
+    svc = _svc(emb)
+    for u in range(5):
+        svc.enqueue(f"u{u}/c0", "s0", _session(
+            [f"I live in Tallinn.", "I adopted a gecko named Pixel."],
+            speaker=f"U{u}"))
+    assert emb.calls == 0, "enqueue must not embed"
+    assert svc.stats()["pending"] == 5
+    assert svc.flush() == 5
+    assert emb.calls == 1, "flush must batch all pending into ONE embed call"
+    assert svc.stats()["pending"] == 0
+    ctx = svc.retrieve("u3/c0", "Which city does the user live in?")
+    assert any(t.object == "tallinn" for t in ctx.triples)
+
+
+def test_flush_empty_is_noop():
+    emb = CountingEmbedder()
+    svc = _svc(emb)
+    assert svc.flush() == 0
+    assert emb.calls == 0
+
+
+def test_enqueue_then_retrieve_is_read_your_writes():
+    svc = _svc()
+    svc.enqueue("u0/c0", "s0", _session(["I live in Lisbon."]))
+    ctx = svc.retrieve("u0/c0", "Which city does the user live in?")
+    assert any(t.object == "lisbon" for t in ctx.triples)
+    assert svc.stats()["pending"] == 0
+
+
+def test_record_equals_enqueue_flush():
+    a, b = _svc(), _svc()
+    msgs = _session(["I work as a chef.", "I adopted a ferret named Maple."])
+    ta, _ = a.record("u/c0", "s0", msgs)
+    b.enqueue("u/c0", "s0", msgs)
+    b.flush()
+    q = [("u/c0", "What is the user's job?")]
+    _contexts_equal(a.retrieve_batch(q), b.retrieve_batch(q))
+    assert [t.text() for t in ta]
+
+
+def test_flush_every_auto_flushes():
+    emb = CountingEmbedder()
+    svc = _svc(emb, flush_every=3)
+    for s in range(3):
+        svc.enqueue("u/c0", f"s{s}", _session([f"I bought a lamp."], ts=s))
+    assert emb.calls == 1 and svc.stats()["pending"] == 0
+
+
+def test_flush_failure_restores_queue_and_commits_nothing():
+    emb = CountingEmbedder()
+    svc = _svc(emb)
+
+    class PoisonError(RuntimeError):
+        pass
+
+    orig = svc.extractor.extract
+
+    def poisoned(conv, sess, msgs):
+        if sess == "poison":
+            raise PoisonError(sess)
+        return orig(conv, sess, msgs)
+
+    svc.extractor.extract = poisoned
+    svc.enqueue("a/c0", "s0", _session(["I live in Tallinn."]))
+    svc.enqueue("b/c0", "poison", _session(["I live in Porto."]))
+    svc.enqueue("a/c0", "s1", _session(["I adopted a gecko named Pixel."]))
+    with pytest.raises(PoisonError):
+        svc.flush()
+    # nothing committed: no orphaned summaries, no bank rows, queue intact
+    st = svc.stats()
+    assert st["pending"] == 3 and st["bank_rows"] == 0
+    assert st["namespaces"] == 0
+    # dropping the poison namespace unblocks the batch
+    svc.evict("b/c0")
+    assert svc.flush() == 2
+    ctx = svc.retrieve("a/c0", "Which city does the user live in?")
+    assert any(t.object == "tallinn" for t in ctx.triples)
+
+
+def test_namespace_view_uses_async_path_when_flush_every_set():
+    emb = CountingEmbedder()
+    svc = _svc(emb, flush_every=2)
+    view = svc.namespace("u/c0")
+    view.record_session("u/c0", "s0", _session(["I live in Tallinn."]))
+    assert emb.calls == 0 and svc.stats()["pending"] == 1
+    view.record_session("u/c0", "s1", _session(["I work as a chef."]))
+    assert emb.calls == 1 and svc.stats()["pending"] == 0
+    # reads see buffered sessions regardless (read-your-writes)
+    view.record_session("u/c0", "s2", _session(["I adopted a magpie."]))
+    ctx = view.retrieve("What pet was adopted?")
+    assert any(t.object == "magpie" for t in ctx.triples)
+
+
+def test_evict_drops_pending_sessions_of_that_namespace():
+    svc = _fill(_svc())
+    svc.enqueue("bob/c0", "s9", _session(["I live in Sapporo."]))
+    svc.evict("bob/c0")
+    assert svc.retrieve("bob/c0", "Which city?").triples == []
+
+
+def test_flush_interleaves_tenants_consistently():
+    """Sessions from several tenants flushed in one batch keep namespace
+    isolation and match a per-session synchronous service."""
+    sync, batched = _svc(), _svc()
+    sessions = [("alice/c0", "s0", _session(["I live in Tallinn."], speaker="Alice")),
+                ("bob/c0", "s0", _session(["I live in Porto."], speaker="Bob")),
+                ("alice/c0", "s1", _session(["I adopted a hedgehog named Biscuit."],
+                                            speaker="Alice")),
+                ("bob/c0", "s1", _session(["I work as a welder."], speaker="Bob"))]
+    for ns, sid, msgs in sessions:
+        sync.record(ns, sid, msgs)
+        batched.enqueue(ns, sid, msgs)
+    batched.flush()
+    q = [("alice/c0", "Which city does the user live in?"),
+         ("bob/c0", "Which city does the user live in?"),
+         ("alice/c0", "What pet was adopted?"),
+         ("bob/c0", "What is the user's job?")]
+    _contexts_equal(batched.retrieve_batch(q), sync.retrieve_batch(q))
+
+
+# -- compaction ----------------------------------------------------------------
+
+def _evict_some(svc):
+    svc.record("alice/c0", "s1", _session(["I work as a luthier."],
+                                          speaker="Alice", ts=1700000100.0))
+    assert svc.evict_superseded("alice/c0") == 1
+    assert svc.evict("carol/c0") > 0
+    return svc
+
+
+def test_compact_shrinks_bank_to_alive_rows_and_preserves_retrieval():
+    svc = _evict_some(_fill(_svc()))
+    before = svc.retrieve_batch(QUERIES)
+    st0 = svc.stats()
+    assert st0["tombstones"] > 0
+    info = svc.compact()
+    assert info["dropped"] == st0["tombstones"]
+    st1 = svc.stats()
+    assert st1["bank_rows"] == st1["alive_rows"] == st0["alive_rows"]
+    assert st1["tombstones"] == 0
+    assert len(svc.bm25) == st1["bank_rows"]
+    _contexts_equal(svc.retrieve_batch(QUERIES), before)
+
+
+def test_compact_is_idempotent_and_ingest_after_compact_works():
+    svc = _evict_some(_fill(_svc()))
+    svc.compact()
+    assert svc.compact()["dropped"] == 0
+    svc.record("dave/c0", "s0", _session(["I live in Windhoek."],
+                                         speaker="Dave"))
+    ctx = svc.retrieve("dave/c0", "Which city does the user live in?")
+    assert any(t.object == "windhoek" for t in ctx.triples)
+    # pre-compaction tenants still answer correctly through remapped rows
+    ctx = svc.retrieve("alice/c0", "What is the user's job?")
+    objs = [t.object for t in ctx.triples]
+    assert "luthier" in objs and "botanist" not in objs
+
+
+def test_compact_flushes_pending_first():
+    svc = _fill(_svc())
+    svc.enqueue("erin/c0", "s0", _session(["I live in Oslo."], speaker="Erin"))
+    svc.compact()
+    assert svc.stats()["pending"] == 0
+    ctx = svc.retrieve("erin/c0", "Which city does the user live in?")
+    assert any(t.object == "oslo" for t in ctx.triples)
+
+
+def test_compact_empty_store_safe():
+    svc = _svc()
+    assert svc.compact() == {"rows_before": 0, "rows_after": 0, "dropped": 0}
+
+
+def test_vector_index_compact_mapping():
+    rng = np.random.default_rng(0)
+    vi = VectorIndex(dim=8, use_kernel=False)
+    vecs = rng.standard_normal((10, 8)).astype(np.float32)
+    vi.add(vecs)
+    vi.delete([1, 4, 5])
+    m = vi.compact()
+    keep = [0, 2, 3, 6, 7, 8, 9]
+    assert m.shape == (10,)
+    assert [int(x) for x in m[keep]] == list(range(7))
+    assert all(int(m[i]) == -1 for i in (1, 4, 5))
+    assert vi.n == vi.n_alive == 7
+    np.testing.assert_array_equal(vi.bank, vecs[keep])
+
+
+# -- snapshot / restore --------------------------------------------------------
+
+def test_snapshot_restore_retrieval_bit_identical(tmp_path):
+    svc = _evict_some(_fill(_svc()))
+    want = svc.retrieve_batch(QUERIES)
+    path = str(tmp_path / "store.msgpack")
+    assert svc.snapshot(path) > 0
+    restored = MemoryService.restore(path, HashEmbedder(), use_kernel=False)
+    _contexts_equal(restored.retrieve_batch(QUERIES), want)
+    # the restored packed bank is byte-identical, tombstones included
+    np.testing.assert_array_equal(restored.vindex.bank, svc.vindex.bank)
+    np.testing.assert_array_equal(restored.vindex.alive(), svc.vindex.alive())
+    assert restored.stats() == svc.stats()
+
+
+def test_snapshot_flushes_pending_writes(tmp_path):
+    svc = _svc()
+    svc.enqueue("u0/c0", "s0", _session(["I live in Lisbon."]))
+    path = str(tmp_path / "store.msgpack")
+    svc.snapshot(path)
+    restored = MemoryService.restore(path, HashEmbedder(), use_kernel=False)
+    ctx = restored.retrieve("u0/c0", "Which city does the user live in?")
+    assert any(t.object == "lisbon" for t in ctx.triples)
+
+
+def test_snapshot_restore_then_compact_then_more_writes(tmp_path):
+    svc = _evict_some(_fill(_svc()))
+    path = str(tmp_path / "store.msgpack")
+    svc.snapshot(path)
+    restored = MemoryService.restore(path, HashEmbedder(), use_kernel=False)
+    before = restored.retrieve_batch(QUERIES)
+    restored.compact()
+    _contexts_equal(restored.retrieve_batch(QUERIES), before)
+    restored.record("bob/c0", "s9", _session(["I moved to Sapporo."],
+                                             speaker="Bob",
+                                             ts=1700000200.0))
+    ctx = restored.retrieve("bob/c0", "Which city does the user live in?")
+    assert any(t.object == "sapporo" for t in ctx.triples)
+
+
+def test_restore_rejects_wrong_version(tmp_path):
+    import msgpack
+    from repro.checkpoint import io as ckpt_io
+    svc = _fill(_svc())
+    path = str(tmp_path / "store.msgpack")
+    svc.snapshot(path)
+    arrays = ckpt_io.load_raw(path)
+    meta = msgpack.unpackb(arrays["meta"].tobytes(), raw=False)
+    meta["version"] = 999
+    arrays["meta"] = np.frombuffer(
+        msgpack.packb(meta, use_bin_type=True), np.uint8)
+    ckpt_io.save(path, arrays)
+    with pytest.raises(StoreInvariantError, match="version"):
+        MemoryService.restore(path, HashEmbedder(), use_kernel=False)
+
+
+# -- invariants are real exceptions --------------------------------------------
+
+def test_write_path_alignment_raises_store_invariant_error():
+    store = MemoryStore(HashEmbedder(), use_kernel=False)
+    orig = store.bm25.add
+    store.bm25.add = lambda texts, namespace=None: \
+        [i + 1 for i in orig(texts, namespace=namespace)]
+    with pytest.raises(StoreInvariantError, match="alignment"):
+        store.ingest("u/c0", "s0", _session(["I live in Porto."]))
+
+
+def test_compaction_drift_raises_store_invariant_error():
+    store = MemoryStore(HashEmbedder(), use_kernel=False)
+    store.ingest("u/c0", "s0", _session(["I live in Porto.",
+                                         "I work as a chef."]))
+    store.vindex.delete([0])          # tombstone the bank only, not BM25
+    with pytest.raises(StoreInvariantError, match="drift"):
+        store.compact()
+
+
+def test_namespace_stats_is_public_api():
+    svc = _fill(_svc())
+    st = svc.namespace_stats("alice/c0")
+    assert st["triples"] > 0 and st["summaries"] == 1
+    assert svc.namespace("alice/c0").stats() == st
+    assert svc.namespace_stats("nobody/c0") == \
+        {"triples": 0, "summaries": 0, "evicted": 0}
+
+
+# -- BM25 storage + batched scoring --------------------------------------------
+
+def test_bm25_topk_batch_matches_sequential_topk():
+    idx = BM25Index()
+    idx.add(["alpha beta gamma", "beta beta delta", "gamma epsilon"],
+            namespace=0)
+    idx.add(["alpha alpha alpha", "zeta eta", "beta gamma zeta"],
+            namespace=1)
+    idx.remove([1])
+    queries = ["alpha beta", "gamma", "zeta eta", "nothing matches here"]
+    namespaces = [0, 1, None, 0]
+    s_b, i_b = idx.topk_batch(queries, k=4, namespaces=namespaces)
+    for b, (q, ns) in enumerate(zip(queries, namespaces)):
+        s_s, i_s = idx.topk(q, k=4, namespace=ns)
+        m = i_b[b] >= 0
+        np.testing.assert_array_equal(i_b[b][m], i_s)
+        np.testing.assert_allclose(s_b[b][m], s_s, rtol=1e-6)
+
+
+def test_bm25_per_doc_namespace_tags():
+    idx = BM25Index()
+    ids = idx.add(["alpha beta", "gamma delta", "alpha gamma"],
+                  namespace=[0, 1, 0])
+    _, i0 = idx.topk("alpha gamma", k=3, namespace=0)
+    assert set(i0.tolist()) == {ids[0], ids[2]}
+    with pytest.raises(ValueError, match="tags"):
+        idx.add(["x"], namespace=[0, 1])
+
+
+def test_bm25_growth_preserves_scores_across_capacity_doublings():
+    grown = BM25Index(capacity=2)
+    fresh = BM25Index()
+    docs = [f"term{i} alpha shared" for i in range(40)]
+    for d in docs:                    # one-by-one: forces several doublings
+        grown.add([d])
+        grown.topk("alpha", k=3)      # interleaved queries (post-add reads)
+    fresh.add(docs)
+    for q in ["alpha shared", "term7", "term39 alpha"]:
+        np.testing.assert_allclose(np.asarray(grown.scores(q)),
+                                   np.asarray(fresh.scores(q)), rtol=1e-6)
+
+
+def test_bm25_compact_mapping_and_scoped_scores():
+    idx = BM25Index()
+    idx.add(["alpha beta", "gamma", "alpha gamma", "delta"],
+            namespace=[0, 0, 1, 1])
+    idx.remove([1, 3])
+    want_s, want_i = idx.topk("alpha", k=4, namespace=0)
+    m = idx.compact()
+    assert [int(x) for x in m] == [0, -1, 1, -1]
+    assert len(idx) == idx.alive_count == 2
+    got_s, got_i = idx.topk("alpha", k=4, namespace=0)
+    np.testing.assert_array_equal(got_i, [int(m[i]) for i in want_i])
+    np.testing.assert_allclose(got_s, want_s, rtol=1e-6)
