@@ -1,34 +1,156 @@
-"""Retrieval hot-spot microbenchmark: the topk_mips Pallas kernel vs the
-pure-jnp oracle on growing bank sizes (wall-clock here is CPU/interpret —
-the roofline numbers in EXPERIMENTS.md §Roofline are the TPU-relevant ones)."""
+"""Retrieval hot-path microbenchmark.
+
+Two modes:
+
+* quick (default; what `benchmarks/run.py` invokes): the original
+  kernel-vs-oracle wall-clock rows on growing bank sizes plus the v5e
+  roofline terms (CPU wall-clock is indicative only — EXPERIMENTS.md
+  §Roofline has the TPU numbers).
+
+* steady (`--steady`): the device-resident engine acceptance benchmark.
+  A bank of `--rows` rows is grown one append at a time while a batch of
+  tenant queries is answered after every append — the serving pattern.
+  Two implementations of the same read path are timed (warmup first, then
+  `block_until_ready` timing):
+
+    - host-roundtrip: the pre-engine code path, faithfully preserved —
+      host numpy bank, per-call `jnp.asarray(bank)` upload, per-call
+      row-namespace rebuild from a Python list, eager masked-oracle
+      scoring;
+    - device-resident: `VectorIndex.search_batch` — capacity-padded device
+      buffers updated in place, cached device labels, one stable-shape
+      jitted launch with the live-row count as a traced scalar.
+
+  A compile counter (jax_log_compiles capture) runs over the growth window
+  and the benchmark ASSERTS zero recompiles for the device path while the
+  bank grows within one power-of-two capacity bucket.
+
+    PYTHONPATH=src python benchmarks/retrieval_microbench.py --steady
+        [--rows 65000] [--batch 8] [--iters 5] [--json BENCH_retrieval.json]
+"""
 from __future__ import annotations
 
+import json
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.kernels import ops, ref
+from repro.common.utils import count_compiles
+from repro.core.vector_index import VectorIndex
+from repro.kernels import ops, ref as kref
 from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
 
+D = 256
 
-def _time(fn, *args, iters=3):
-    fn(*args)[0].block_until_ready()
-    t0 = time.time()
+
+class HostRoundtripIndex:
+    """The pre-engine read path, kept verbatim for comparison: the bank
+    lives in host numpy, every search re-uploads it (`jnp.asarray`) and
+    rebuilds the row->namespace array from a Python list, and the masked
+    oracle runs eagerly (the use_kernel=False service configuration)."""
+
+    def __init__(self, dim: int, capacity: int = 1024):
+        self.dim, self.n = dim, 0
+        self._bank = np.zeros((capacity, dim), np.float32)
+        self._row_ns: list = []
+
+    def add(self, vecs, ns):
+        m = vecs.shape[0]
+        while self.n + m > self._bank.shape[0]:
+            self._bank = np.concatenate(
+                [self._bank, np.zeros_like(self._bank)], axis=0)
+        self._bank[self.n: self.n + m] = vecs
+        self._row_ns.extend(int(x) for x in np.broadcast_to(ns, (m,)))
+        self.n += m
+
+    def search(self, queries, q_ns, k: int):
+        bank = jnp.asarray(self._bank[: self.n])          # per-call upload
+        row_ns = np.asarray(self._row_ns, np.int32)       # per-call rebuild
+        s, i = kref.topk_mips_masked_ref(
+            jnp.asarray(queries), bank, jnp.asarray(q_ns, jnp.int32),
+            jnp.asarray(row_ns), k=k)
+        return s, i
+
+
+def _grow_and_search_loop(add_fn, search_fn, rows_per_iter: int, iters: int,
+                          warmup: int = 2):
+    """The serving pattern: append, then answer a query batch.  Returns
+    seconds/iteration (device work fenced by block_until_ready)."""
+    for _ in range(warmup):
+        add_fn()
+        search_fn()[1].block_until_ready()
+    t0 = time.perf_counter()
     for _ in range(iters):
-        out = fn(*args)
-    out[0].block_until_ready()
-    return (time.time() - t0) / iters
+        add_fn()
+        out = search_fn()
+    out[1].block_until_ready()
+    return (time.perf_counter() - t0) / iters
 
 
-def run(csv_rows):
+def run_steady(csv_rows, rows: int = 65000, batch: int = 8, iters: int = 5,
+               k: int = 64, n_tenants: int = 32, json_out=None):
+    print(f"\n# Retrieval steady state — device-resident engine vs "
+          f"host-roundtrip path (N={rows}, B={batch}, k={k}, D={D}, CPU)")
+    rng = np.random.default_rng(0)
+    base = rng.standard_normal((rows, D)).astype(np.float32)
+    base_ns = (np.arange(rows) % n_tenants).astype(np.int32)
+    q = rng.standard_normal((batch, D)).astype(np.float32)
+    q_ns = (np.arange(batch) % n_tenants).astype(np.int32)
+    new_row = rng.standard_normal((1, D)).astype(np.float32)
+
+    legacy = HostRoundtripIndex(D)
+    legacy.add(base, base_ns)
+    t_host = _grow_and_search_loop(
+        lambda: legacy.add(new_row, [0]),
+        lambda: legacy.search(q, q_ns, k), 1, iters)
+
+    vi = VectorIndex(dim=D, use_kernel=False)
+    vi.add(base, ns=base_ns)
+    cap = vi.capacity
+    assert vi.n + iters + 8 <= cap, \
+        f"growth window {iters + 8} would cross the {cap} capacity bucket"
+    t_dev = _grow_and_search_loop(
+        lambda: vi.add(new_row, ns=[0]),
+        lambda: vi.search_batch(q, q_ns, k=k), 1, iters)
+
+    # zero-recompile assertion across further growth within the bucket
+    with count_compiles() as cc:
+        for _ in range(4):
+            vi.add(new_row, ns=[0])
+            _, i = vi.search_batch(q, q_ns, k=k)
+        i.block_until_ready()
+    if cc.count:
+        raise AssertionError(
+            f"device-resident search recompiled {cc.count}x while the bank "
+            f"grew inside the {cap}-row capacity bucket: {cc.msgs[:3]}")
+
+    speedup = t_host / t_dev
+    print(f"rows {rows:7d} (capacity {cap}): host-roundtrip "
+          f"{t_host*1e3:8.1f}ms/iter | device-resident {t_dev*1e3:8.1f}ms/iter"
+          f" | speedup {speedup:5.2f}x | recompiles during growth: 0")
+    csv_rows.append((f"retrieval/steady_N{rows}", t_dev * 1e6,
+                     f"{speedup:.2f}x vs host-roundtrip"))
+    if json_out is not None:
+        json_out.append({
+            "rows": rows, "capacity": cap, "batch": batch, "k": k,
+            "t_host_roundtrip_ms": t_host * 1e3,
+            "t_device_resident_ms": t_dev * 1e3,
+            "speedup": speedup,
+            "grow_steps_checked": 4, "recompiles": cc.count,
+        })
+    return csv_rows
+
+
+def run_quick(csv_rows):
     print("\n# Retrieval microbench — fused topk_mips vs jnp oracle")
     key = jax.random.PRNGKey(0)
-    D, K = 256, 32
+    K = 32
     for N in (1024, 8192, 32768):
         q = jax.random.normal(key, (64, D))
         bank = jax.random.normal(jax.random.fold_in(key, 1), (N, D))
-        t_ref = _time(lambda a, b: ref.topk_mips_ref(a, b, k=K), q, bank)
+        t_ref = _time(lambda a, b: kref.topk_mips_ref(a, b, k=K), q, bank)
         flops = 2 * 64 * N * D
         bytes_ = (64 * D + N * D) * 4
         # v5e roofline for this op (exact MIPS is bandwidth-bound at Q=64)
@@ -42,5 +164,41 @@ def run(csv_rows):
     return csv_rows
 
 
+def _time(fn, *args, iters=3):
+    fn(*args)[0].block_until_ready()
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    out[0].block_until_ready()
+    return (time.time() - t0) / iters
+
+
+def run(csv_rows, steady: bool = False, rows: int = 65000, batch: int = 8,
+        iters: int = 5, json_path=None):
+    report = {"steady_state": []}
+    if steady:
+        run_steady(csv_rows, rows=rows, batch=batch, iters=iters,
+                   json_out=report["steady_state"])
+    else:
+        run_quick(csv_rows)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"\nwrote {json_path}")
+    return csv_rows
+
+
 if __name__ == "__main__":
-    run([])
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steady", action="store_true",
+                    help="steady-state device-resident vs host-roundtrip "
+                         "comparison + zero-recompile assertion")
+    ap.add_argument("--rows", type=int, default=65000)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--iters", type=int, default=5)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write a BENCH_retrieval.json artifact")
+    args = ap.parse_args()
+    run([], steady=args.steady, rows=args.rows, batch=args.batch,
+        iters=args.iters, json_path=args.json)

@@ -20,4 +20,11 @@ if [[ "${FAST_ONLY:-0}" != "1" ]]; then
         --json BENCH_service.json
     echo "== BENCH_service.json =="
     cat BENCH_service.json
+
+    echo "== bench: steady-state retrieval (device-resident engine, 65k-row bank) =="
+    # asserts zero recompiles while the bank grows within a capacity bucket
+    JAX_PLATFORMS=cpu python benchmarks/retrieval_microbench.py \
+        --steady --json BENCH_retrieval.json
+    echo "== BENCH_retrieval.json =="
+    cat BENCH_retrieval.json
 fi

@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
+import logging
 import math
 from typing import Any
 
@@ -41,6 +42,42 @@ def human_count(n: float) -> str:
             return f"{n:.2f}{unit}"
         n /= 1000.0
     return f"{n:.2f}Q"
+
+
+class count_compiles:
+    """Context manager counting XLA compilations inside the `with` block by
+    capturing jax's `jax_log_compiles` log records.  The handle exposes
+    `.count` and `.msgs`.  Used by the retrieval-engine tests and the
+    steady-state benchmark to assert the device-resident search never
+    recompiles while the bank grows within one capacity bucket — keep the
+    'Compiling' message match in sync with the pinned jax version (the
+    tests include a positive control so silent breakage is caught)."""
+
+    class _Handler(logging.Handler):
+        def __init__(self):
+            super().__init__(level=logging.DEBUG)
+            self.count, self.msgs = 0, []
+
+        def emit(self, record):
+            msg = record.getMessage()
+            if "Compiling" in msg:
+                self.count += 1
+                self.msgs.append(msg[:120])
+
+    def __enter__(self):
+        self.handler = self._Handler()
+        self.logger = logging.getLogger("jax")
+        self.prev_level = self.logger.level
+        self.logger.addHandler(self.handler)
+        self.logger.setLevel(logging.DEBUG)
+        jax.config.update("jax_log_compiles", True)
+        return self.handler
+
+    def __exit__(self, *exc):
+        jax.config.update("jax_log_compiles", False)
+        self.logger.removeHandler(self.handler)
+        self.logger.setLevel(self.prev_level)
+        return False
 
 
 def cdiv(a: int, b: int) -> int:

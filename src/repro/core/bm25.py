@@ -28,6 +28,7 @@ from __future__ import annotations
 
 from typing import List, Optional, Sequence, Tuple, Union
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -260,29 +261,37 @@ class BM25Index:
         m = ids[0] >= 0
         return s[0][m], ids[0][m]
 
-    def topk_batch(self, queries: Sequence[str], k: int,
-                   namespaces: Optional[Sequence[Optional[int]]] = None
-                   ) -> Tuple[np.ndarray, np.ndarray]:
-        """Batched scoped top-k: one stacked (B, N) scoring op, then a host
-        k-selection per query.  Returns (scores (B, k), ids (B, k)); slots
-        beyond a query's selection size hold (0, -1)."""
+    def topk_batch_dev(self, queries: Sequence[str], k: int,
+                       namespaces: Optional[Sequence[Optional[int]]] = None):
+        """Batched scoped top-k, all on device: one stacked (B, N) scoring
+        op + one `jax.lax.top_k` over the selection-masked scores (the old
+        per-query host argsort loop is gone).  Returns DEVICE arrays
+        (scores (B, k) f32, ids (B, k) i32); slots beyond a query's
+        selection size hold (0, -1).  Ties rank the lower doc id first,
+        matching a stable host argsort."""
         B = len(queries)
-        scores = np.zeros((B, k), np.float32)
-        ids = np.full((B, k), -1, np.int64)
         if B == 0 or self.n == 0:
-            return scores, ids
+            return (jnp.zeros((B, k), jnp.float32),
+                    jnp.full((B, k), -1, jnp.int32))
         if namespaces is None:
             namespaces = [None] * B
         sels = np.stack([self._selection(ns) for ns in namespaces])
-        S = np.asarray(self._scores_batch(
-            [self._terms(q) for q in queries], sels))
-        for b in range(B):
-            cand = np.where(sels[b])[0]
-            if cand.size == 0:
-                continue
-            kk = min(k, cand.size)
-            s = S[b][cand]
-            order = np.argsort(-s, kind="stable")[:kk]
-            scores[b, :kk] = s[order]
-            ids[b, :kk] = cand[order]
-        return scores, ids
+        S = self._scores_batch([self._terms(q) for q in queries], sels)
+        key = jnp.where(jnp.asarray(sels), S, -jnp.inf)
+        kk = min(k, self.n)
+        s, idx = jax.lax.top_k(key, kk)
+        live = s > -jnp.inf
+        s = jnp.where(live, s, 0.0)
+        idx = jnp.where(live, idx, -1).astype(jnp.int32)
+        if kk < k:
+            s = jnp.pad(s, ((0, 0), (0, k - kk)))
+            idx = jnp.pad(idx, ((0, 0), (0, k - kk)), constant_values=-1)
+        return s, idx
+
+    def topk_batch(self, queries: Sequence[str], k: int,
+                   namespaces: Optional[Sequence[Optional[int]]] = None
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+        """Host-array wrapper over `topk_batch_dev` (the device op is the
+        single implementation; this just pulls the (B, k) result across)."""
+        s, idx = self.topk_batch_dev(queries, k, namespaces=namespaces)
+        return np.asarray(s, np.float32), np.asarray(idx, np.int64)

@@ -1,29 +1,131 @@
 """Hybrid retrieval: cosine similarity over triple embeddings + BM25 keyword
-matching (paper §3.3), fused by weighted reciprocal-rank fusion."""
+matching (paper §3.3), fused by weighted reciprocal-rank fusion.
+
+Two implementations of the same contract:
+
+* `rrf_fuse` — the scalar oracle: one query, Python lists, a dict loop.
+  Accumulates in float32 so the batched device path can match it bit-for-bit.
+* `rrf_fuse_batch` — the production path: a whole batch of queries' dense and
+  sparse id matrices fused in ONE device op (rank-position scores, a masked
+  segment-sum over an O(P²) id-equality mask, and a single lexicographic
+  `jax.lax.sort` on (-score, id)).  No per-request Python loop; the (B, k)
+  result crosses to the host once.  Ordering (including duplicate-id
+  suppression, -1 padding, and score ties broken by lower doc id) matches
+  `rrf_fuse` exactly — property-tested in tests/test_retrieval_engine.py.
+"""
 from __future__ import annotations
 
+import functools
 from typing import Dict, List, Sequence, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 
 def rrf_fuse(rankings: Sequence[Sequence[int]], weights: Sequence[float] = None,
              c: float = 60.0) -> List[Tuple[int, float]]:
     """Weighted reciprocal-rank fusion.  rankings: lists of doc ids, best
-    first.  Returns (doc_id, fused_score) sorted descending.  Within one
-    ranking only a doc's best (first) rank counts — a duplicated id must not
-    accumulate score, or any upstream bug that emits duplicates silently
-    inflates that doc's fused rank."""
+    first (ids < 0 are padding and ignored).  Returns (doc_id, fused_score)
+    sorted descending, ties broken by lower doc id.  Within one ranking only
+    a doc's best (first) rank counts — a duplicated id must not accumulate
+    score, or any upstream bug that emits duplicates silently inflates that
+    doc's fused rank.  Scores accumulate in float32: this function is the
+    oracle for the on-device `rrf_fuse_batch`, which must match it exactly."""
     weights = weights or [1.0] * len(rankings)
-    scores: Dict[int, float] = {}
+    scores: Dict[int, np.float32] = {}
+    zero = np.float32(0.0)
     for ranking, w in zip(rankings, weights):
+        w32 = np.float32(w)
         seen = set()
         for rank, doc in enumerate(ranking):
+            doc = int(doc)
             if doc < 0 or doc in seen:
                 continue
             seen.add(doc)
-            scores[doc] = scores.get(doc, 0.0) + w / (c + rank + 1.0)
-    return sorted(scores.items(), key=lambda kv: (-kv[1], kv[0]))
+            scores[doc] = np.float32(
+                scores.get(doc, zero) + w32 / np.float32(c + rank + 1.0))
+    return sorted(((d, float(s)) for d, s in scores.items()),
+                  key=lambda kv: (-kv[1], kv[0]))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "c"))
+def _rrf_fuse_device(ids, pos, ranking_id, weights, *, k: int, c: float):
+    """ids (B, P) i32 concatenated rankings (-1 padding); pos (P,) i32 rank
+    within the owning ranking; ranking_id (P,) i32 column -> ranking;
+    weights (R,) f32.  Returns (fused_ids (B, k) i32, scores (B, k) f32)."""
+    B, P = ids.shape
+    valid = ids >= 0                                            # (B, P)
+    eq = ids[:, :, None] == ids[:, None, :]                     # (B, P, P)
+    earlier = jnp.tril(jnp.ones((P, P), bool), k=-1)            # l < j
+    same_ranking = ranking_id[:, None] == ranking_id[None, :]
+    # within one ranking only the first occurrence of an id scores:
+    # dup[b, j] <=> some column l < j in the same ranking holds the same id
+    dup = jnp.any(eq & (earlier & same_ranking)[None, :, :], axis=2)
+    contrib = jnp.where(
+        valid & ~dup,
+        weights[ranking_id][None, :] /
+        (jnp.float32(c) + pos.astype(jnp.float32)[None, :] + 1.0),
+        0.0)                                                    # (B, P)
+    # fused[b, j] = sum of contribs at every column holding the same id,
+    # accumulated as a left-fold over the rankings in ranking order.  Each
+    # per-ranking term has at most ONE nonzero per (b, j) (duplicates are
+    # zeroed above) and adding exact zeros is the identity, so the float32
+    # rounding sequence is bit-identical to the scalar oracle's dict
+    # accumulation — for any number of rankings, not just two.
+    fused = jnp.zeros((B, P), jnp.float32)
+    for r in range(weights.shape[0]):
+        in_r = (ranking_id == r).astype(jnp.float32)            # (P,)
+        fused = fused + jnp.sum(
+            (contrib * in_r[None, :])[:, None, :] * eq, axis=2)
+    # first concatenated occurrence of each id represents it in the output
+    keep = valid & ~jnp.any(eq & earlier[None, :, :], axis=2)
+    neg = jnp.where(keep, -fused, jnp.inf)
+    sort_ids = jnp.where(keep, ids, jnp.iinfo(jnp.int32).max)
+    out_ids = jnp.where(keep, ids, -1)
+    # lexicographic (-score, id): descending score, ties to the lower doc id
+    neg_s, _, ids_s = jax.lax.sort((neg, sort_ids, out_ids), dimension=1,
+                                   num_keys=2, is_stable=True)
+    kk = min(k, P)
+    live = neg_s[:, :kk] < jnp.inf
+    return (jnp.where(live, ids_s[:, :kk], -1),
+            jnp.where(live, -neg_s[:, :kk], 0.0))
+
+
+def rrf_fuse_batch(rankings, weights: Sequence[float] = None, c: float = 60.0,
+                   k: int = 10):
+    """Batched on-device RRF: `rankings` is a sequence of (B, P_i) id
+    matrices, best-first along axis 1 with -1 padding (the stacked dense and
+    sparse retrieval outputs).  Returns device arrays (fused_ids (B, k) i32,
+    fused_scores (B, k) f32), -1/0 beyond each row's fused pool.  Row b
+    equals `rrf_fuse([rankings[0][b], rankings[1][b], ...], weights, c)[:k]`
+    exactly (same ids, same order, same float32 scores)."""
+    rankings = [jnp.asarray(r, jnp.int32) for r in rankings]
+    if not rankings or rankings[0].shape[0] == 0:
+        B = rankings[0].shape[0] if rankings else 0
+        return (jnp.full((B, k), -1, jnp.int32),
+                jnp.zeros((B, k), jnp.float32))
+    weights = weights or [1.0] * len(rankings)
+    P_sizes = [int(r.shape[1]) for r in rankings]
+    pos = np.concatenate([np.arange(p, dtype=np.int32) for p in P_sizes]) \
+        if sum(P_sizes) else np.zeros((0,), np.int32)
+    ranking_id = np.concatenate(
+        [np.full((p,), i, np.int32) for i, p in enumerate(P_sizes)]) \
+        if sum(P_sizes) else np.zeros((0,), np.int32)
+    B = rankings[0].shape[0]
+    if sum(P_sizes) == 0:
+        return (jnp.full((B, k), -1, jnp.int32),
+                jnp.zeros((B, k), jnp.float32))
+    ids = jnp.concatenate(rankings, axis=1)
+    fused_ids, fused_scores = _rrf_fuse_device(
+        ids, jnp.asarray(pos), jnp.asarray(ranking_id),
+        jnp.asarray(weights, jnp.float32), k=k, c=float(c))
+    P = sum(P_sizes)
+    if P < k:
+        fused_ids = jnp.pad(fused_ids, ((0, 0), (0, k - P)),
+                            constant_values=-1)
+        fused_scores = jnp.pad(fused_scores, ((0, 0), (0, k - P)))
+    return fused_ids, fused_scores
 
 
 def hybrid_search(query_text: str, query_vec, vindex, bm25, top_k: int = 24,

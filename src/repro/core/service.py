@@ -6,11 +6,16 @@ namespaces, and the amortization that makes that affordable on TPU is
 *batching*: pending queries across tenants are embedded in ONE
 `embed_texts` call and scored in ONE namespace-masked `topk_mips` launch
 against a packed multi-tenant bank (per-row namespace ids; cross-namespace
-hits masked to NEG_INF before the top-k merge — kernels/topk_mips.py), and
-the sparse side is ONE stacked (B, N) BM25 scoring op with per-query
-namespace masks.  Writes amortize the same way: `enqueue()` queues sessions
-for free and `flush()` ingests everything pending across all tenants
-through one `embed_texts` call and one bank append (`record()` is the
+hits masked to NEG_INF before the top-k merge — kernels/topk_mips.py), the
+sparse side is ONE stacked (B, N) BM25 scoring op with per-query namespace
+masks, and the dense/sparse rankings fuse in ONE on-device
+`rrf_fuse_batch` (core/hybrid.py).  The bank, its alive/namespace labels
+and the row-count all live device-resident (core/vector_index.py): a
+steady-state `retrieve_batch` issues zero bank H2D transfers and zero
+recompiles while the bank grows within a power-of-two capacity bucket.
+Writes amortize the same way: `enqueue()` queues sessions for free and
+`flush()` ingests everything pending across all tenants through one
+`embed_texts` call and one in-place device bank append (`record()` is the
 synchronous enqueue-then-flush).
 
 Storage — the packed bank, the BM25 corpus, the per-tenant triple/summary
@@ -38,7 +43,7 @@ import numpy as np
 
 from repro.core.budget import TokenBudgeter
 from repro.core.extraction import Extractor, Message
-from repro.core.hybrid import rrf_fuse
+from repro.core.hybrid import rrf_fuse_batch
 from repro.core.memory import ANSWER_PROMPT, MemoriMemory, RetrievedContext
 from repro.core.store import MemoryStore
 from repro.core.summaries import Summary
@@ -140,10 +145,14 @@ class MemoryService:
         """[(namespace, query), ...] -> per-request RetrievedContext.
 
         The cross-tenant hot path: one embed_texts call for every pending
-        query, one masked topk_mips launch against the packed bank, one
-        stacked BM25 scoring op for the sparse side.  Reads are
-        read-your-writes: pending enqueued sessions are flushed first.  The
-        per-request results are identical to sequential retrieve() calls."""
+        query, one stable-shape masked topk_mips launch against the
+        device-resident packed bank (cached row labels — no per-call bank
+        upload, no label rebuild), one stacked BM25 scoring op for the
+        sparse side, and ONE on-device `rrf_fuse_batch` that fuses every
+        request at once; the (B, k) fused ranking crosses to the host in a
+        single transfer.  Reads are read-your-writes: pending enqueued
+        sessions are flushed first.  The per-request results are identical
+        to sequential retrieve() calls."""
         if not requests:
             return []
         if self.store.pending_count:
@@ -154,25 +163,25 @@ class MemoryService:
         tenants = [self.store.get(ns) for ns, _ in requests]
         qvecs = self.embedder.embed_texts([q for _, q in requests])
         vindex = self.store.vindex
-        dense_ids = None
-        if vindex.n and vindex.n_alive:
+        B = len(requests)
+        if vindex.n:
             # unknown tenants get a never-assigned ns id (>= 0, so it can't
             # collide with the -1 tombstone label): they match no bank row
+            # on the dense side and select no documents on the sparse side
             unused = self.store.namespace_id_count()
-            q_ns = np.asarray([t.ns_id if t else unused for t in tenants],
-                              np.int32)
-            row_ns = self.store.row_namespaces()
-            pool = min(self.pool, vindex.n)
-            _, dense_ids = vindex.search_masked(qvecs, q_ns, row_ns, k=pool)
-        # sparse side: every known tenant's query in ONE stacked scoring op
-        known = [r for r, t in enumerate(tenants) if t is not None]
-        sparse_ranks = {}
-        if known:
-            _, sp_ids = self.store.bm25.topk_batch(
-                [requests[r][1] for r in known], k=self.pool,
-                namespaces=[tenants[r].ns_id for r in known])
-            for j, r in enumerate(known):
-                sparse_ranks[r] = [int(i) for i in sp_ids[j] if i >= 0]
+            ns_ids = [t.ns_id if t else unused for t in tenants]
+            q_ns = np.asarray(ns_ids, np.int32)
+            _, dense_ids = vindex.search_batch(qvecs, q_ns, k=self.pool)
+            _, sparse_ids = self.store.bm25.topk_batch_dev(
+                [q for _, q in requests], k=self.pool, namespaces=ns_ids)
+            fused_ids, fused_scores = rrf_fuse_batch(
+                [dense_ids, sparse_ids],
+                weights=[self.dense_weight, self.sparse_weight], k=k)
+            fused_ids = np.asarray(fused_ids)
+            fused_scores = np.asarray(fused_scores)
+        else:
+            fused_ids = np.full((B, k), -1, np.int32)
+            fused_scores = np.zeros((B, k), np.float32)
         out: List[RetrievedContext] = []
         for r, ((ns, qtext), t) in enumerate(zip(requests, tenants)):
             if t is None:
@@ -180,12 +189,9 @@ class MemoryService:
                 out.append(RetrievedContext([], [], text,
                                             self.tokenizer.count(text)))
                 continue
-            dense_rank = [] if dense_ids is None else \
-                [int(i) for i in dense_ids[r] if i >= 0]
-            fused = rrf_fuse([dense_rank, sparse_ranks[r]],
-                             weights=[self.dense_weight, self.sparse_weight])
-            scored = [(t.triples.get(self.store.row_tid(g)), score)
-                      for g, score in fused[:k]]
+            scored = [(t.triples.get(self.store.row_tid(int(g))), float(s))
+                      for g, s in zip(fused_ids[r], fused_scores[r])
+                      if g >= 0]
             ctx = self.budgeter.select(scored, t.summaries)
             text = MemoriMemory.render(ctx.triples, ctx.summaries)
             out.append(RetrievedContext(ctx.triples, ctx.summaries, text,

@@ -85,7 +85,8 @@ class MemoryStore:
         self._tenants: Dict[str, TenantState] = {}
         self._ns_ids: Dict[str, int] = {}      # survives evict(): tombstoned
         #                                        rows keep a retired ns id
-        self._row_ns: List[int] = []           # global row -> namespace id
+        # global row -> namespace id lives in the vector index (single
+        # source of truth, mirrored into its device label buffer)
         self._row_tid: List[int] = []          # global row -> local tid
         self._pending: List[PendingSession] = []
 
@@ -111,8 +112,16 @@ class MemoryStore:
         return len(self._ns_ids)
 
     def row_namespaces(self) -> np.ndarray:
-        """(n,) int32: every bank row's namespace id."""
-        return np.asarray(self._row_ns, np.int32)
+        """(n,) int32: every bank row's namespace id (host array; the
+        vector index is the single owner of the row->namespace mapping)."""
+        return self.vindex.row_namespaces()
+
+    def row_namespaces_device(self):
+        """(capacity,) i32 DEVICE array of effective row labels (live row ->
+        ns id, tombstone/unfilled -> -1).  Cached inside the vector index
+        and updated in place on flush/evict; rebuilt after compact/restore —
+        the retrieval hot path never reconstructs it per call."""
+        return self.vindex.row_labels_device()
 
     def row_tid(self, row: int) -> int:
         return self._row_tid[row]
@@ -167,18 +176,18 @@ class MemoryStore:
             self.tenant(p.namespace).summaries.add(summary)
         if flat:
             tenants = [self.tenant(p.namespace) for p, _ in flat]
-            rows = self.vindex.add(vecs)                     # ONE bank append
+            rows = self.vindex.add(                          # ONE bank append
+                vecs, ns=[t.ns_id for t in tenants])
             bids = self.bm25.add([tr.text() for _, tr in flat],
                                  namespace=[t.ns_id for t in tenants])
             for t, (_, tr), row, bid in zip(tenants, flat, rows, bids):
-                if not (int(row) == int(bid) == len(self._row_ns)):
+                if not (int(row) == int(bid) == len(self._row_tid)):
                     raise StoreInvariantError(
                         f"write-path alignment drift: bank row {int(row)}, "
                         f"BM25 doc {int(bid)}, row table size "
-                        f"{len(self._row_ns)} must all be equal")
+                        f"{len(self._row_tid)} must all be equal")
                 tid = t.triples.add(tr)
                 t.rows.append(int(row))
-                self._row_ns.append(t.ns_id)
                 self._row_tid.append(tid)
         return [(p.namespace, triples, summary)
                 for p, triples, summary in batch]
@@ -241,7 +250,6 @@ class MemoryStore:
                 "compaction drift: the vector bank and the BM25 corpus "
                 "disagree on which rows are tombstoned")
         keep = old_to_new >= 0
-        self._row_ns = [ns for ns, k in zip(self._row_ns, keep) if k]
         self._row_tid = [tid for tid, k in zip(self._row_tid, keep) if k]
         for t in self._tenants.values():
             t.rows = [int(old_to_new[r]) if r >= 0 else -1 for r in t.rows]
@@ -280,7 +288,7 @@ class MemoryStore:
         arrays = {
             "bank": self.vindex.bank.copy(),
             "bank_alive": self.vindex.alive(),
-            "row_ns": np.asarray(self._row_ns, np.int32),
+            "row_ns": self.vindex.row_namespaces(),
             "row_tid": np.asarray(self._row_tid, np.int32),
             "bm25_docs": self.bm25.doc_array(),
             "bm25_lens": self.bm25.len_array(),
@@ -309,13 +317,13 @@ class MemoryStore:
                 f"snapshot version {meta['version']} != {SNAPSHOT_VERSION}")
         store = cls(embedder, extractor, dim=int(meta["dim"]),
                     use_kernel=use_kernel, tokenizer=tokenizer)
-        store.vindex.load_rows(arrays["bank"], arrays["bank_alive"])
+        store.vindex.load_rows(arrays["bank"], arrays["bank_alive"],
+                               ns=arrays["row_ns"])
         bm = meta["bm25"]
         store.bm25.k1, store.bm25.b = float(bm["k1"]), float(bm["b"])
         store.bm25.max_doc_len = int(bm["max_doc_len"])
         store.bm25.load_rows(arrays["bm25_docs"], arrays["bm25_lens"],
                              arrays["bm25_ns"], arrays["bm25_alive"])
-        store._row_ns = [int(x) for x in arrays["row_ns"]]
         store._row_tid = [int(x) for x in arrays["row_tid"]]
         store._ns_ids = {str(k): int(v) for k, v in meta["ns_ids"].items()}
         for ns, td in meta["tenants"].items():
@@ -327,12 +335,12 @@ class MemoryStore:
             t.rows = [int(r) for r in td["rows"]]
             t.evicted = set(int(i) for i in td["evicted"])
             store._tenants[str(ns)] = t
-        if len(store._row_ns) != store.vindex.n or \
+        if len(store._row_tid) != store.vindex.n or \
                 store.vindex.n != len(store.bm25):
             raise StoreInvariantError(
                 f"restore: bank ({store.vindex.n}), BM25 "
                 f"({len(store.bm25)}) and row tables "
-                f"({len(store._row_ns)}) disagree")
+                f"({len(store._row_tid)}) disagree")
         return store
 
     # -- stats -------------------------------------------------------------

@@ -1,10 +1,24 @@
 """Sharded exact-MIPS vector index — the FAISS replacement (DESIGN.md §3).
 
+Device-resident retrieval engine: the packed bank and the per-row effective
+namespace labels (namespace id for live rows, -1 for tombstones and unfilled
+capacity) live in capacity-doubling **device** buffers.  `add` / `delete`
+update them in place (donated `dynamic_update_slice` / scatter — no
+host round-trip), so steady-state search issues *zero* per-call bank H2D
+transfers.  The number of live rows rides into the kernel as a traced SMEM
+scalar and the jitted search is keyed only on the padded buffer shapes,
+which change exclusively at power-of-two capacity boundaries — thousands of
+appends reuse one executable.  A host mirror is kept for snapshot/compact
+and as the plain-numpy source of truth (`bank`, `alive()`).
+
 Single-device search runs the fused Pallas topk_mips kernel.  On a mesh, the
 bank rows shard across every device (logical axis "bank"); search is the
 classic distributed-ANN reduction expressed in shard_map:
 
     local top-k per shard  →  all_gather(k·shards candidates)  →  re-rank
+
+and the namespace mask rides along shard-local, so one sharded launch serves
+a whole batch of tenants (see `sharded_topk(..., q_ns=, bank_ns=)`).
 
 Exact search is the right call *because of the paper*: Advanced Augmentation
 compresses raw dialogue into triples, keeping the bank orders of magnitude
@@ -23,6 +37,52 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
+from repro.kernels import topk_mips as _tm
+
+
+# ---------------------------------------------------------------------------
+# Device-side primitives.  All donate their buffer arguments so XLA updates
+# the capacity-padded arrays in place (no realloc, no host round-trip); the
+# jit cache is keyed on (capacity, update width) only.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _dev_append(bank, labels, vecs, ns, start):
+    """Write `vecs` rows + `ns` labels at [start, start+m) in place."""
+    bank = jax.lax.dynamic_update_slice(bank, vecs, (start, 0))
+    labels = jax.lax.dynamic_update_slice(labels, ns, (start,))
+    return bank, labels
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _dev_delete(bank, labels, ids):
+    """Tombstone rows in place: zero the vectors, set the labels to -1."""
+    bank = bank.at[ids].set(0.0)
+    labels = labels.at[ids].set(-1)
+    return bank, labels
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "use_kernel", "interpret", "uniform"))
+def _search_device(bank, labels, queries, q_ns, n_valid, *, k: int,
+                   use_kernel: bool, interpret: bool, uniform: bool):
+    """The stable-shape jitted hot path: one masked top-k over the padded
+    device bank.  `n_valid` is traced — appends within a capacity bucket
+    reuse this executable.  With `uniform=True` the namespace structure is
+    collapsed (any live row matches: the single-tenant / tombstone-only
+    search).  Empty slots come back as (-inf, -1)."""
+    bank_ns = jnp.where(labels >= 0, 0, -1) if uniform else labels
+    if use_kernel:
+        s, i = _tm.topk_mips(queries, bank, k, n_valid=n_valid, q_ns=q_ns,
+                             bank_ns=bank_ns, interpret=interpret)
+    else:
+        s, i = kref.topk_mips_masked_ref(queries, bank, q_ns, bank_ns, k=k,
+                                         n_valid=n_valid)
+    return jnp.where(i >= 0, s, -jnp.inf), i
+
+
+def _next_capacity(n: int, floor: int = 64) -> int:
+    return max(floor, 1 << max(0, int(n - 1).bit_length()))
 
 
 class VectorIndex:
@@ -30,22 +90,82 @@ class VectorIndex:
         self.dim = dim
         self.n = 0
         self.use_kernel = use_kernel
+        capacity = _next_capacity(capacity)
+        # host mirror: source of truth for snapshot/compact and numpy readers
         self._bank = np.zeros((capacity, dim), np.float32)
         self._alive = np.ones((capacity,), bool)
+        self._ns = np.zeros((capacity,), np.int32)   # raw per-row labels
+        # device buffers (lazily materialized, then incrementally updated)
+        self._bank_dev = None
+        self._labels_dev = None
 
-    def add(self, vecs) -> np.ndarray:
+    # -- device residency ---------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        return self._bank.shape[0]
+
+    def _effective_labels(self) -> np.ndarray:
+        """(capacity,) i32: ns label for live rows in [0, n), else -1."""
+        eff = np.full((self.capacity,), -1, np.int32)
+        eff[: self.n] = np.where(self._alive[: self.n], self._ns[: self.n], -1)
+        return eff
+
+    def _invalidate_device(self) -> None:
+        self._bank_dev = None
+        self._labels_dev = None
+
+    def _ensure_device(self) -> None:
+        """Materialize the device buffers from the host mirror.  Happens on
+        the first search and after capacity changes (grow/compact/load) —
+        never on the steady-state search path."""
+        if self._bank_dev is None:
+            self._bank_dev = jnp.asarray(self._bank)
+            self._labels_dev = jnp.asarray(self._effective_labels())
+
+    def row_labels_device(self):
+        """(capacity,) i32 device array of effective namespace labels (live
+        row -> its ns id, tombstone/unfilled -> -1).  Cached device-side and
+        updated in place by add/delete; invalidated by compact/load_rows.
+        Returns a device-to-device COPY: the live buffer is donated (and
+        thus deleted) by the next add/delete on backends that honor
+        donation, so a caller must never hold a view of it across writes."""
+        self._ensure_device()
+        return self._labels_dev.copy()
+
+    # -- writes --------------------------------------------------------------
+    def add(self, vecs, ns=None) -> np.ndarray:
+        """Append rows.  `ns` labels the new rows' namespace (scalar or
+        per-row sequence; default 0).  The device buffers are updated in
+        place unless the append crosses a capacity boundary."""
         vecs = np.asarray(vecs, np.float32)
         if vecs.ndim == 1:
             vecs = vecs[None]
         m = vecs.shape[0]
-        while self.n + m > self._bank.shape[0]:
-            self._bank = np.concatenate(
-                [self._bank, np.zeros_like(self._bank)], axis=0)
-            self._alive = np.concatenate(
-                [self._alive, np.ones_like(self._alive)])
+        if np.ndim(ns) == 0:
+            ns_rows = np.full((m,), 0 if ns is None else int(ns), np.int32)
+        else:
+            ns_rows = np.asarray(ns, np.int32)
+            if ns_rows.shape != (m,):
+                raise ValueError(
+                    f"{ns_rows.shape[0]} namespace labels for {m} rows")
+        if self.n + m > self.capacity:
+            cap = _next_capacity(self.n + m, floor=2 * self.capacity)
+            bank = np.zeros((cap, self.dim), np.float32)
+            bank[: self.n] = self._bank[: self.n]
+            alive = np.ones((cap,), bool)
+            alive[: self.n] = self._alive[: self.n]
+            labels = np.zeros((cap,), np.int32)
+            labels[: self.n] = self._ns[: self.n]
+            self._bank, self._alive, self._ns = bank, alive, labels
+            self._invalidate_device()     # re-upload once per doubling
         ids = np.arange(self.n, self.n + m)
         self._bank[self.n: self.n + m] = vecs
         self._alive[self.n: self.n + m] = True
+        self._ns[self.n: self.n + m] = ns_rows
+        if self._bank_dev is not None:
+            self._bank_dev, self._labels_dev = _dev_append(
+                self._bank_dev, self._labels_dev, jnp.asarray(vecs),
+                jnp.asarray(ns_rows), jnp.int32(self.n))
         self.n += m
         return ids
 
@@ -67,6 +187,11 @@ class VectorIndex:
             return self._alive[: self.n].copy()
         return self._alive[np.asarray(ids, np.int64)]
 
+    def row_namespaces(self) -> np.ndarray:
+        """(n,) i32 raw namespace labels (host mirror; tombstones keep their
+        retired label here — the *effective* device labels mask them)."""
+        return self._ns[: self.n].copy()
+
     def delete(self, ids) -> int:
         """Tombstone rows: ids keep their slots (the tid==row alignment with
         TripleStore/BM25 survives) but the vectors are physically zeroed and
@@ -76,6 +201,9 @@ class VectorIndex:
         ids = ids[self._alive[ids]]
         self._alive[ids] = False
         self._bank[ids] = 0.0
+        if ids.size and self._bank_dev is not None:
+            self._bank_dev, self._labels_dev = _dev_delete(
+                self._bank_dev, self._labels_dev, jnp.asarray(ids))
         return int(ids.size)
 
     def compact(self) -> np.ndarray:
@@ -90,86 +218,120 @@ class VectorIndex:
         keep = np.where(alive)[0]
         old_to_new[keep] = np.arange(keep.size)
         n_new = int(keep.size)
-        cap = max(64, 1 << max(0, int(n_new - 1).bit_length()))
+        cap = _next_capacity(n_new)
         bank = np.zeros((cap, self.dim), np.float32)
         bank[:n_new] = self._bank[keep]
+        labels = np.zeros((cap,), np.int32)
+        labels[:n_new] = self._ns[keep]
         self._bank = bank
         self._alive = np.ones((cap,), bool)
+        self._ns = labels
         self.n = n_new
+        self._invalidate_device()
         return old_to_new
 
-    def load_rows(self, bank, alive) -> None:
-        """Bulk-load a snapshot's rows (replaces any current content)."""
+    def load_rows(self, bank, alive, ns=None) -> None:
+        """Bulk-load a snapshot's rows (replaces any current content).
+        `ns` carries the per-row namespace labels (default 0)."""
         bank = np.asarray(bank, np.float32)
         n = bank.shape[0]
         if bank.ndim != 2 or bank.shape[1] != self.dim:
             raise ValueError(f"bank shape {bank.shape} != (*, {self.dim})")
-        cap = max(64, 1 << max(0, int(n - 1).bit_length()))
+        cap = _next_capacity(n)
         self._bank = np.zeros((cap, self.dim), np.float32)
         self._bank[:n] = bank
         self._alive = np.ones((cap,), bool)
         self._alive[:n] = np.asarray(alive, bool)
+        self._ns = np.zeros((cap,), np.int32)
+        if ns is not None:
+            self._ns[:n] = np.asarray(ns, np.int32)
         self.n = n
+        self._invalidate_device()
 
-    def search(self, queries, k: int) -> Tuple[np.ndarray, np.ndarray]:
-        """queries (Q, D) -> (scores (Q, k), ids (Q, k)); ids == -1 beyond n.
-        Tombstoned rows never appear: with any dead rows the search routes
-        through the masked kernel (uniform namespace, dead rows -> -1),
-        which keeps k static across delete()s — no per-delete retrace and
-        no over-fetch."""
-        queries = jnp.asarray(queries, jnp.float32)
-        if queries.ndim == 1:
-            queries = queries[None]
-        Q = queries.shape[0]
-        if self.n == 0 or self.n_alive == 0:
-            return (np.full((Q, k), -np.inf, np.float32),
-                    np.full((Q, k), -1, np.int64))
-        if self.n_dead:
-            return self.search_masked(queries, np.zeros((Q,), np.int32),
-                                      np.zeros((self.n,), np.int32), k)
-        bank = jnp.asarray(self.bank)
-        kk = min(k, self.n)
-        if self.use_kernel:
-            s, i = kops.topk_mips(queries, bank, k=kk)
-        else:
-            s, i = kref.topk_mips_ref(queries, bank, k=kk)
+    # -- reads ---------------------------------------------------------------
+    def _empty(self, Q: int, k: int) -> Tuple[np.ndarray, np.ndarray]:
+        return (np.full((Q, k), -np.inf, np.float32),
+                np.full((Q, k), -1, np.int64))
+
+    def _run_search(self, queries, q_ns, k: int, labels=None,
+                    uniform: bool = False):
+        """Shared driver for every search flavor: clamp k to the padded
+        capacity, run the stable-shape jitted search, hand back device
+        arrays.  `labels=None` uses the cached device labels."""
+        self._ensure_device()
+        if labels is None:
+            labels = self._labels_dev
+        kk = min(k, self.capacity)
+        s, i = _search_device(
+            self._bank_dev, labels, queries, q_ns, jnp.int32(self.n),
+            k=kk, use_kernel=self.use_kernel,
+            interpret=kops._interpret_default(), uniform=uniform)
+        return s, i, kk
+
+    def _to_host(self, s, i, k: int, kk: int):
         s = np.asarray(s)
         i = np.asarray(i, np.int64)
         if kk < k:
             s = np.pad(s, ((0, 0), (0, k - kk)), constant_values=-np.inf)
             i = np.pad(i, ((0, 0), (0, k - kk)), constant_values=-1)
+        return s, i
+
+    def search(self, queries, k: int) -> Tuple[np.ndarray, np.ndarray]:
+        """queries (Q, D) -> (scores (Q, k), ids (Q, k)); empty slots (rows
+        beyond n, tombstones crowding out candidates) are (-inf, -1).  Runs
+        the namespace-collapsed masked search over the device-resident bank:
+        k stays static across add()/delete() — no retrace, no over-fetch."""
+        queries = jnp.asarray(queries, jnp.float32)
+        if queries.ndim == 1:
+            queries = queries[None]
+        Q = queries.shape[0]
+        if self.n == 0 or self.n_alive == 0:
+            return self._empty(Q, k)
+        s, i, kk = self._run_search(
+            queries, jnp.zeros((Q,), jnp.int32), k, uniform=True)
+        return self._to_host(s, i, k, kk)
+
+    def search_batch(self, queries, q_ns, k: int):
+        """The multi-tenant hot path: one stable-shape launch over the
+        device-resident bank using the *cached* device labels (no per-call
+        label rebuild, no bank transfer).  Returns DEVICE arrays
+        (scores (Q, k) f32, ids (Q, k) i32) so callers can keep fusing
+        on-device; empty slots are (-inf, -1)."""
+        queries = jnp.asarray(queries, jnp.float32)
+        if queries.ndim == 1:
+            queries = queries[None]
+        Q = queries.shape[0]
+        if self.n == 0 or self.n_alive == 0:
+            return (jnp.full((Q, k), -jnp.inf, jnp.float32),
+                    jnp.full((Q, k), -1, jnp.int32))
+        q_ns = jnp.asarray(q_ns, jnp.int32)
+        s, i, kk = self._run_search(queries, q_ns, k)
+        if kk < k:
+            s = jnp.pad(s, ((0, 0), (0, k - kk)), constant_values=-jnp.inf)
+            i = jnp.pad(i, ((0, 0), (0, k - kk)), constant_values=-1)
         return s, i
 
     def search_masked(self, queries, q_ns, row_ns, k: int
                       ) -> Tuple[np.ndarray, np.ndarray]:
-        """Batched multi-tenant search: one kernel launch over the packed
-        bank.  q_ns (Q,) >= 0 is each query's namespace, row_ns (n,) labels
-        every bank row; tombstoned rows are masked regardless of their label.
-        Rows outside the query's namespace never appear (ids -1 / -inf)."""
+        """Batched multi-tenant search with *caller-supplied* labels:
+        q_ns (Q,) >= 0 is each query's namespace, row_ns (n,) labels every
+        bank row; tombstoned rows are masked regardless of their label.
+        The bank itself stays device-resident; only the (n,) label vector is
+        uploaded.  Prefer `search_batch` (cached labels) on the hot path."""
         queries = jnp.asarray(queries, jnp.float32)
         if queries.ndim == 1:
             queries = queries[None]
         Q = queries.shape[0]
         if self.n == 0 or self.n_alive == 0:
-            return (np.full((Q, k), -np.inf, np.float32),
-                    np.full((Q, k), -1, np.int64))
+            return self._empty(Q, k)
         row_ns = np.asarray(row_ns, np.int32)
-        assert row_ns.shape == (self.n,), (row_ns.shape, self.n)
-        eff_ns = jnp.asarray(np.where(self._alive[: self.n], row_ns, -1))
-        q_ns = jnp.asarray(q_ns, jnp.int32)
-        kk = min(k, self.n)
-        if self.use_kernel:
-            s, i = kops.topk_mips_masked(queries, jnp.asarray(self.bank),
-                                         q_ns, eff_ns, k=kk)
-        else:
-            s, i = kref.topk_mips_masked_ref(queries, jnp.asarray(self.bank),
-                                             q_ns, eff_ns, k=kk)
-        s = np.asarray(s)
-        i = np.asarray(i, np.int64)
-        if kk < k:
-            s = np.pad(s, ((0, 0), (0, k - kk)), constant_values=-np.inf)
-            i = np.pad(i, ((0, 0), (0, k - kk)), constant_values=-1)
-        return s, i
+        if row_ns.shape != (self.n,):
+            raise ValueError(f"row_ns shape {row_ns.shape} != ({self.n},)")
+        eff = np.full((self.capacity,), -1, np.int32)
+        eff[: self.n] = np.where(self._alive[: self.n], row_ns, -1)
+        s, i, kk = self._run_search(queries, jnp.asarray(q_ns, jnp.int32), k,
+                                    labels=jnp.asarray(eff))
+        return self._to_host(s, i, k, kk)
 
 
 # ---------------------------------------------------------------------------
@@ -191,20 +353,36 @@ def _shard_map_unchecked(fn, mesh, in_specs, out_specs):
                       out_specs=out_specs, **{flag: False})
 
 
-def sharded_topk(queries, bank, k: int, mesh: Mesh, axis_names=("data", "model")):
+def sharded_topk(queries, bank, k: int, mesh: Mesh, axis_names=("data", "model"),
+                 *, q_ns=None, bank_ns=None, use_kernel: bool = True,
+                 interpret: Optional[bool] = None):
     """bank rows sharded over `axis_names` (flattened); returns global
-    (scores (Q,k), ids (Q,k)).  Local top-k → all_gather → re-rank."""
+    (scores (Q,k), ids (Q,k)).  Local top-k → all_gather → re-rank.
+
+    Local shard scoring runs the fused Pallas kernel (interpret mode
+    off-TPU); pass `use_kernel=False` for the pure-jnp oracle path.
+
+    Namespace-masked sharded search: pass q_ns (Q,) i32 and bank_ns (N,)
+    i32 (both or neither; bank_ns shards with the bank rows, -1 marks
+    tombstones).  Cross-namespace rows never surface — results match the
+    single-device masked search exactly (ids -1 / scores NEG_INF for
+    unfilled slots), including when a tenant owns fewer than k rows or
+    k exceeds the per-shard row count."""
     flat_axes = tuple(a for a in axis_names if a in mesh.axis_names)
     n_shards = int(np.prod([mesh.shape[a] for a in flat_axes]))
     N = bank.shape[0]
     assert N % n_shards == 0, (N, n_shards)
     shard_rows = N // n_shards
+    masked = q_ns is not None or bank_ns is not None
+    if masked:
+        assert q_ns is not None and bank_ns is not None, \
+            "q_ns and bank_ns must be given together"
+        q_ns = jnp.asarray(q_ns, jnp.int32)
+        bank_ns = jnp.asarray(bank_ns, jnp.int32)
+    interp = kops._interpret_default() if interpret is None else interpret
+    k_local = min(k, shard_rows)
 
-    def local(q, b):
-        # positional index of this shard along the flattened bank axes
-        idx = jax.lax.axis_index(flat_axes)
-        s, i = kref.topk_mips_ref(q, b, k=min(k, shard_rows))
-        i = i + idx * shard_rows
+    def _rerank(s, i):
         # gather candidates from every shard, then re-rank globally
         s_all = jax.lax.all_gather(s, flat_axes, axis=1, tiled=True)
         i_all = jax.lax.all_gather(i, flat_axes, axis=1, tiled=True)
@@ -212,9 +390,36 @@ def sharded_topk(queries, bank, k: int, mesh: Mesh, axis_names=("data", "model")
         top_i = jnp.take_along_axis(i_all, pos, axis=1)
         return top_s, top_i
 
+    def local(q, b):
+        # positional index of this shard along the flattened bank axes
+        idx = jax.lax.axis_index(flat_axes)
+        if use_kernel:
+            s, i = _tm.topk_mips(q, b, k_local, interpret=interp)
+        else:
+            s, i = kref.topk_mips_ref(q, b, k=k_local)
+        i = i + idx * shard_rows
+        return _rerank(s, i)
+
+    def local_masked(q, b, qns, bns):
+        idx = jax.lax.axis_index(flat_axes)
+        if use_kernel:
+            s, i = _tm.topk_mips(q, b, k_local, q_ns=qns, bank_ns=bns,
+                                 interpret=interp)
+        else:
+            s, i = kref.topk_mips_masked_ref(q, b, qns, bns, k=k_local)
+        # -1 sentinels (masked-out slots) must not be offset into real ids
+        i = jnp.where(i >= 0, i + idx * shard_rows, -1)
+        top_s, top_i = _rerank(s, i)
+        return top_s, jnp.where(top_s > _tm.NEG_INF / 2, top_i, -1)
+
     spec_bank = P(flat_axes)
     # outputs are replicated by construction (all_gather + local re-rank);
     # the replication checker can't prove it, so we assert it ourselves
+    if masked:
+        fn = _shard_map_unchecked(local_masked, mesh=mesh,
+                                  in_specs=(P(), spec_bank, P(), spec_bank),
+                                  out_specs=(P(), P()))
+        return fn(queries, bank, q_ns, bank_ns)
     fn = _shard_map_unchecked(local, mesh=mesh,
                               in_specs=(P(), spec_bank),
                               out_specs=(P(), P()))

@@ -20,22 +20,27 @@ def _interpret_default() -> bool:
 
 
 @functools.partial(jax.jit, static_argnames=("k", "block_q", "block_n", "interpret"))
-def topk_mips(queries, bank, k: int = 32, *, block_q: int = 128,
+def topk_mips(queries, bank, k: int = 32, *, n_valid=None, block_q: int = 128,
               block_n: int = 512, interpret: bool | None = None):
+    """`n_valid` is a *traced* operand (SMEM scalar inside the kernel): a
+    capacity-padded bank can grow its live prefix call after call without a
+    recompile — the executable is keyed on the padded shapes only."""
     interpret = _interpret_default() if interpret is None else interpret
-    return _tm.topk_mips(queries, bank, k, block_q=block_q, block_n=block_n,
-                         interpret=interpret)
+    return _tm.topk_mips(queries, bank, k, n_valid=n_valid, block_q=block_q,
+                         block_n=block_n, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "block_q", "block_n", "interpret"))
 def topk_mips_masked(queries, bank, q_ns, bank_ns, k: int = 32, *,
-                     block_q: int = 128, block_n: int = 512,
+                     n_valid=None, block_q: int = 128, block_n: int = 512,
                      interpret: bool | None = None):
     """Namespace-masked batched MIPS: one launch scores many tenants' queries
-    against one packed multi-tenant bank (cross-namespace hits -> NEG_INF/-1)."""
+    against one packed multi-tenant bank (cross-namespace hits -> NEG_INF/-1).
+    `n_valid` is traced, as in topk_mips."""
     interpret = _interpret_default() if interpret is None else interpret
-    return _tm.topk_mips(queries, bank, k, q_ns=q_ns, bank_ns=bank_ns,
-                         block_q=block_q, block_n=block_n, interpret=interpret)
+    return _tm.topk_mips(queries, bank, k, n_valid=n_valid, q_ns=q_ns,
+                         bank_ns=bank_ns, block_q=block_q, block_n=block_n,
+                         interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "scale",

@@ -7,23 +7,36 @@ import jax.numpy as jnp
 NEG_INF = -2.0e38
 
 
-def topk_mips_ref(queries, bank, k: int = 32):
-    """queries (Q,D), bank (N,D) -> (scores (Q,k) f32, indices (Q,k) i32)."""
+def topk_mips_ref(queries, bank, k: int = 32, n_valid=None):
+    """queries (Q,D), bank (N,D) -> (scores (Q,k) f32, indices (Q,k) i32).
+    With `n_valid` (traced i32 scalar), rows >= n_valid are padding: they
+    score NEG_INF and report index -1 — matching the kernel's stable-shape
+    contract over capacity-padded banks."""
     s = jnp.einsum("qd,nd->qn", queries.astype(jnp.float32),
                    bank.astype(jnp.float32))
+    if n_valid is not None:
+        col = jnp.arange(bank.shape[0], dtype=jnp.int32)[None, :]
+        s = jnp.where(col < n_valid, s, NEG_INF)
     scores, idx = jax.lax.top_k(s, k)
+    if n_valid is not None:
+        idx = jnp.where(scores > NEG_INF / 2, idx, -1)
     return scores, idx.astype(jnp.int32)
 
 
-def topk_mips_masked_ref(queries, bank, q_ns, bank_ns, k: int = 32):
+def topk_mips_masked_ref(queries, bank, q_ns, bank_ns, k: int = 32,
+                         n_valid=None):
     """Namespace-masked MIPS oracle: cross-namespace scores become NEG_INF
     and their indices -1 (matching the kernel, whose running top-k never
     admits a masked column).  q_ns (Q,) i32 >= 0; bank_ns (N,) i32 with -1
-    marking tombstoned rows."""
+    marking tombstoned rows.  `n_valid` bounds the live bank prefix of a
+    capacity-padded bank, as in topk_mips_ref."""
     s = jnp.einsum("qd,nd->qn", queries.astype(jnp.float32),
                    bank.astype(jnp.float32))
     ok = jnp.asarray(q_ns, jnp.int32)[:, None] == \
         jnp.asarray(bank_ns, jnp.int32)[None, :]
+    if n_valid is not None:
+        col = jnp.arange(bank.shape[0], dtype=jnp.int32)[None, :]
+        ok = ok & (col < n_valid)
     s = jnp.where(ok, s, NEG_INF)
     scores, idx = jax.lax.top_k(s, k)
     idx = jnp.where(scores > NEG_INF / 2, idx, -1)

@@ -20,6 +20,13 @@ merge, so one kernel launch serves a whole batch of tenants against one
 packed bank (the MemoryService batched-retrieval path).  Rows with
 namespace -1 are tombstones and match no query.  Without namespaces the
 original kernel runs unchanged.
+
+Stable-shape contract (the device-resident retrieval engine): the number of
+valid bank rows rides along as a *traced* SMEM scalar, never a trace-time
+constant.  Callers may hand in a capacity-padded bank (rows >= n_valid are
+garbage) and grow `n_valid` append after append without triggering a single
+recompile — the executable is keyed only on the padded shapes, which the
+VectorIndex changes exclusively at power-of-two capacity boundaries.
 """
 from __future__ import annotations
 
@@ -28,6 +35,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -2.0e38
 
@@ -52,8 +60,8 @@ def _merge_topk(scores_ref, idx_ref, s, col, k: int):
         all_s = jnp.where(hit, NEG_INF, all_s)
 
 
-def _kernel(q_ref, bank_ref, scores_ref, idx_ref, *, block_n: int, k: int,
-            n_valid: int):
+def _kernel(nvalid_ref, q_ref, bank_ref, scores_ref, idx_ref, *, block_n: int,
+            k: int):
     nb = pl.program_id(1)
 
     @pl.when(nb == 0)
@@ -66,12 +74,12 @@ def _kernel(q_ref, bank_ref, scores_ref, idx_ref, *, block_n: int, k: int,
     s = jax.lax.dot_general(q, b, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32)     # (Qb, Nb)
     col = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1) + nb * block_n
-    s = jnp.where(col < n_valid, s, NEG_INF)   # mask padded bank rows
+    s = jnp.where(col < nvalid_ref[0], s, NEG_INF)  # mask padded bank rows
     _merge_topk(scores_ref, idx_ref, s, col, k)
 
 
-def _kernel_masked(q_ref, bank_ref, qns_ref, bns_ref, scores_ref, idx_ref, *,
-                   block_n: int, k: int, n_valid: int):
+def _kernel_masked(nvalid_ref, q_ref, bank_ref, qns_ref, bns_ref, scores_ref,
+                   idx_ref, *, block_n: int, k: int):
     nb = pl.program_id(1)
 
     @pl.when(nb == 0)
@@ -85,15 +93,20 @@ def _kernel_masked(q_ref, bank_ref, qns_ref, bns_ref, scores_ref, idx_ref, *,
                             preferred_element_type=jnp.float32)     # (Qb, Nb)
     col = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1) + nb * block_n
     # (Qb, 1) == (1, Nb) broadcast: a hit survives only within its namespace
-    ok = (col < n_valid) & (qns_ref[...] == bns_ref[...])
+    ok = (col < nvalid_ref[0]) & (qns_ref[...] == bns_ref[...])
     s = jnp.where(ok, s, NEG_INF)
     _merge_topk(scores_ref, idx_ref, s, col, k)
 
 
-def topk_mips(queries, bank, k: int = 32, *, q_ns=None, bank_ns=None,
-              block_q: int = 128, block_n: int = 512, interpret: bool = False):
+def topk_mips(queries, bank, k: int = 32, *, n_valid=None, q_ns=None,
+              bank_ns=None, block_q: int = 128, block_n: int = 512,
+              interpret: bool = False):
     """queries (Q, D) · bank (N, D) -> (scores (Q, k) f32, indices (Q, k) i32).
-    Rows beyond N (padding) never appear: padded bank rows score NEG_INF.
+
+    `n_valid` (traced i32 scalar, default N) bounds the live bank prefix:
+    rows >= n_valid never appear (NEG_INF score, index -1 if nothing live
+    fills the slot).  Passing a capacity-padded bank plus a traced n_valid
+    keeps the compiled executable stable while the bank grows.
 
     Optional namespace mask: q_ns (Q,) i32 and bank_ns (N,) i32 (both or
     neither).  Bank rows whose namespace differs from the query's score
@@ -101,6 +114,9 @@ def topk_mips(queries, bank, k: int = 32, *, q_ns=None, bank_ns=None,
     must be >= 0, bank_ns == -1 marks tombstoned rows."""
     Q, D = queries.shape
     N = bank.shape[0]
+    if n_valid is None:
+        n_valid = N
+    nv = jnp.asarray(n_valid, jnp.int32).reshape(1)
     bq = min(block_q, max(8, Q))
     bn = min(block_n, max(8, N))
     Qp = -(-Q // bq) * bq
@@ -109,6 +125,7 @@ def topk_mips(queries, bank, k: int = 32, *, q_ns=None, bank_ns=None,
     bp = jnp.pad(bank, ((0, Np - N), (0, 0)))
 
     grid = (Qp // bq, Np // bn)
+    nv_spec = pl.BlockSpec(memory_space=pltpu.SMEM)
     out_specs = [
         pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
         pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
@@ -119,16 +136,17 @@ def topk_mips(queries, bank, k: int = 32, *, q_ns=None, bank_ns=None,
     ]
     if q_ns is None and bank_ns is None:
         scores, idx = pl.pallas_call(
-            functools.partial(_kernel, block_n=bn, k=k, n_valid=N),
+            functools.partial(_kernel, block_n=bn, k=k),
             grid=grid,
             in_specs=[
+                nv_spec,
                 pl.BlockSpec((bq, D), lambda i, j: (i, 0)),
                 pl.BlockSpec((bn, D), lambda i, j: (j, 0)),
             ],
             out_specs=out_specs,
             out_shape=out_shape,
             interpret=interpret,
-        )(qp, bp)
+        )(nv, qp, bp)
         return scores[:Q], idx[:Q]
     assert q_ns is not None and bank_ns is not None, \
         "q_ns and bank_ns must be given together"
@@ -138,9 +156,10 @@ def topk_mips(queries, bank, k: int = 32, *, q_ns=None, bank_ns=None,
     bns = jnp.pad(jnp.asarray(bank_ns, jnp.int32), (0, Np - N),
                   constant_values=-2).reshape(1, Np)
     scores, idx = pl.pallas_call(
-        functools.partial(_kernel_masked, block_n=bn, k=k, n_valid=N),
+        functools.partial(_kernel_masked, block_n=bn, k=k),
         grid=grid,
         in_specs=[
+            nv_spec,
             pl.BlockSpec((bq, D), lambda i, j: (i, 0)),
             pl.BlockSpec((bn, D), lambda i, j: (j, 0)),
             pl.BlockSpec((bq, 1), lambda i, j: (i, 0)),
@@ -149,5 +168,5 @@ def topk_mips(queries, bank, k: int = 32, *, q_ns=None, bank_ns=None,
         out_specs=out_specs,
         out_shape=out_shape,
         interpret=interpret,
-    )(qp, bp, qns, bns)
+    )(nv, qp, bp, qns, bns)
     return scores[:Q], idx[:Q]

@@ -115,6 +115,45 @@ def test_topk_mips_masked_empty_namespace_returns_sentinels():
     assert (np.asarray(i)[1] >= 0).all()
 
 
+@pytest.mark.parametrize("masked", [False, True])
+def test_topk_mips_traced_n_valid_matches_truncated_oracle(masked):
+    """Stable-shape contract: a capacity-padded bank + traced n_valid must
+    answer exactly like the oracle on the truncated bank — for several
+    n_valid values through ONE jitted executable (shapes never change)."""
+    D, N_pad, kk = 16, 96, 6
+    q = jax.random.normal(k(31), (5, D))
+    bank = jax.random.normal(k(32), (N_pad, D))
+    q_ns = jnp.asarray([0, 1, 2, 0, 1], jnp.int32)
+    bank_ns = jnp.asarray(np.arange(N_pad) % 3, jnp.int32)
+    for n_valid in (3, 17, 50, 96):
+        if masked:
+            s, i = ops.topk_mips_masked(q, bank, q_ns, bank_ns, k=kk,
+                                        n_valid=n_valid,
+                                        block_q=8, block_n=32)
+            sr, ir = ref.topk_mips_masked_ref(q, bank[:n_valid], q_ns,
+                                              bank_ns[:n_valid], k=kk) \
+                if n_valid >= kk else ref.topk_mips_masked_ref(
+                    q, bank, q_ns, bank_ns, k=kk, n_valid=n_valid)
+        else:
+            s, i = ops.topk_mips(q, bank, k=kk, n_valid=n_valid,
+                                 block_q=8, block_n=32)
+            sr, ir = ref.topk_mips_ref(q, bank, k=kk, n_valid=n_valid)
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(ir))
+        mask = np.asarray(ir) >= 0
+        np.testing.assert_allclose(np.asarray(s)[mask], np.asarray(sr)[mask],
+                                   rtol=1e-5)
+        # returned hits always come from the live prefix
+        ii = np.asarray(i)
+        assert ((ii < n_valid) | (ii == -1)).all()
+
+
+def test_topk_mips_n_valid_zero_returns_all_sentinels():
+    q = jax.random.normal(k(33), (2, 8))
+    bank = jax.random.normal(k(34), (32, 8))
+    s, i = ops.topk_mips(q, bank, k=4, n_valid=0, block_q=8, block_n=8)
+    assert (np.asarray(i) == -1).all()
+
+
 def test_topk_scores_sorted_and_indices_valid():
     q = jax.random.normal(k(3), (9, 16))
     bank = jax.random.normal(k(4), (77, 16))

@@ -1,0 +1,257 @@
+"""Device-resident retrieval engine (core/vector_index.py + core/hybrid.py):
+device-vs-host-mirror parity under interleaved mutation, zero-recompile /
+zero-upload steady-state guarantees, and the batched on-device RRF against
+its scalar oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.utils import count_compiles
+from repro.core import vector_index as vi_mod
+from repro.core.embedder import HashEmbedder
+from repro.core.extraction import Message
+from repro.core.hybrid import rrf_fuse, rrf_fuse_batch
+from repro.core.service import MemoryService
+from repro.core.vector_index import VectorIndex
+from repro.kernels import ref as kref
+
+RNG = np.random.default_rng(7)
+
+
+def _oracle(vi: VectorIndex, q, q_ns, k):
+    """Recompute search_batch from the HOST mirrors only."""
+    if vi.n == 0 or vi.n_alive == 0:
+        return np.full((q.shape[0], k), -1, np.int64)
+    eff = np.where(vi.alive(), vi.row_namespaces(), -1)
+    _, i = kref.topk_mips_masked_ref(
+        jnp.asarray(q), jnp.asarray(vi.bank), jnp.asarray(q_ns, jnp.int32),
+        jnp.asarray(eff, jnp.int32), k=min(k, vi.n))
+    i = np.asarray(i, np.int64)
+    if i.shape[1] < k:
+        i = np.pad(i, ((0, 0), (0, k - i.shape[1])), constant_values=-1)
+    return i
+
+
+# -- device buffers == host mirror under interleaved mutation -----------------
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_device_vs_host_mirror_parity_interleaved(use_kernel):
+    """add / delete / compact / load_rows(snapshot-restore) interleaved with
+    searches: the incrementally-updated device buffers must answer exactly
+    like an oracle recomputed from the host mirror after every step."""
+    dim, k = 16, 6
+    vi = VectorIndex(dim=dim, capacity=64, use_kernel=use_kernel)
+    q = RNG.standard_normal((4, dim)).astype(np.float32)
+    q_ns = np.asarray([0, 1, 2, 9], np.int32)       # ns 9 never populated
+
+    def check():
+        _, i = vi.search_batch(q, q_ns, k=k)
+        np.testing.assert_array_equal(np.asarray(i, np.int64),
+                                      _oracle(vi, q, q_ns, k))
+
+    vi.add(RNG.standard_normal((10, dim)).astype(np.float32),
+           ns=np.arange(10) % 3)
+    check()
+    vi.delete([0, 4, 7])
+    check()
+    vi.add(RNG.standard_normal((30, dim)).astype(np.float32),
+           ns=np.arange(30) % 3)                    # stays inside capacity
+    check()
+    vi.delete(np.arange(10, 25))
+    check()
+    vi.compact()                                    # device rebuild
+    check()
+    vi.add(RNG.standard_normal((100, dim)).astype(np.float32),
+           ns=np.arange(100) % 3)                   # crosses a capacity boundary
+    check()
+    # snapshot-restore round trip through load_rows
+    bank, alive, ns = vi.bank.copy(), vi.alive(), vi.row_namespaces()
+    vi2 = VectorIndex(dim=dim, capacity=64, use_kernel=use_kernel)
+    vi2.load_rows(bank, alive, ns=ns)
+    _, i1 = vi.search_batch(q, q_ns, k=k)
+    _, i2 = vi2.search_batch(q, q_ns, k=k)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    vi2.delete([1, 2])
+    _, i = vi2.search_batch(q, q_ns, k=k)
+    np.testing.assert_array_equal(np.asarray(i, np.int64),
+                                  _oracle(vi2, q, q_ns, k))
+
+
+def test_search_and_search_masked_agree_with_search_batch():
+    """The three read APIs are one engine: uniform-ns search == masked
+    search with zero labels; caller-supplied labels == cached labels."""
+    dim = 8
+    vi = VectorIndex(dim=dim, capacity=64, use_kernel=False)
+    vi.add(RNG.standard_normal((20, dim)).astype(np.float32))   # default ns 0
+    vi.delete([3, 8])
+    q = RNG.standard_normal((3, dim)).astype(np.float32)
+    s0, i0 = vi.search(q, k=5)
+    _, i1 = vi.search_batch(q, np.zeros((3,), np.int32), k=5)
+    s2, i2 = vi.search_masked(q, np.zeros((3,), np.int32),
+                              np.zeros((20,), np.int32), k=5)
+    np.testing.assert_array_equal(i0, np.asarray(i1, np.int64))
+    np.testing.assert_array_equal(i0, i2)
+    np.testing.assert_array_equal(s0, s2)
+
+
+# -- steady state: no recompiles, no bank uploads -----------------------------
+
+def test_no_recompile_and_no_bank_upload_within_capacity_bucket(monkeypatch):
+    """The acceptance contract of the device-resident engine: while the bank
+    grows WITHIN a power-of-two capacity bucket, steady-state searches reuse
+    one executable (zero compiles) and never re-upload the bank (zero
+    capacity-sized jnp.asarray calls in the index module)."""
+    dim, cap = 32, 1024
+    vi = VectorIndex(dim=dim, capacity=cap, use_kernel=False)
+    vi.add(RNG.standard_normal((100, dim)).astype(np.float32),
+           ns=np.arange(100) % 4)
+    q = RNG.standard_normal((8, dim)).astype(np.float32)
+    q_ns = np.asarray([0, 1, 2, 3, 0, 1, 2, 3], np.int32)
+    # warmup: one search and one single-row append compile the executables
+    np.asarray(vi.search_batch(q, q_ns, k=16)[1])
+    vi.add(RNG.standard_normal((1, dim)).astype(np.float32), ns=[0])
+    np.asarray(vi.search_batch(q, q_ns, k=16)[1])
+
+    uploads = []
+    real_asarray = vi_mod.jnp.asarray
+
+    def spy_asarray(x, *a, **kw):
+        if getattr(x, "nbytes", 0) >= cap * dim * 4:
+            uploads.append(np.shape(x))
+        return real_asarray(x, *a, **kw)
+
+    monkeypatch.setattr(vi_mod.jnp, "asarray", spy_asarray)
+    with count_compiles() as cc:
+        for _ in range(40):
+            vi.add(RNG.standard_normal((1, dim)).astype(np.float32), ns=[1])
+            _, i = vi.search_batch(q, q_ns, k=16)
+        np.asarray(i)
+    assert cc.count == 0, f"recompiled {cc.count}x: {cc.msgs[:3]}"
+    assert uploads == [], f"bank-sized host->device transfers: {uploads}"
+    assert vi.n == 141
+
+
+def test_crossing_capacity_boundary_recompiles_once_then_stabilizes():
+    dim = 16
+    vi = VectorIndex(dim=dim, capacity=64, use_kernel=False)
+    vi.add(RNG.standard_normal((60, dim)).astype(np.float32), ns=[0] * 60)
+    q = RNG.standard_normal((2, dim)).astype(np.float32)
+    q_ns = np.zeros((2,), np.int32)
+    np.asarray(vi.search_batch(q, q_ns, k=4)[1])
+    # positive control: crossing the boundary changes the padded shapes, so
+    # the counter MUST observe compiles here — this is what keeps the
+    # zero-compile assertions below from passing vacuously if a jax upgrade
+    # ever changes the log_compiles message format
+    with count_compiles() as cc_cross:
+        vi.add(RNG.standard_normal((10, dim)).astype(np.float32), ns=[0] * 10)
+        np.asarray(vi.search_batch(q, q_ns, k=4)[1])
+    assert vi.capacity == 128
+    assert cc_cross.count >= 1, \
+        "compile counter failed to observe the capacity-boundary recompile"
+    # warmup in the new bucket: the 1-row append compiles once
+    vi.add(RNG.standard_normal((1, dim)).astype(np.float32), ns=[0])
+    np.asarray(vi.search_batch(q, q_ns, k=4)[1])
+    with count_compiles() as cc:
+        for _ in range(10):
+            vi.add(RNG.standard_normal((1, dim)).astype(np.float32), ns=[0])
+            _, i = vi.search_batch(q, q_ns, k=4)
+        np.asarray(i)
+    assert cc.count == 0, cc.msgs[:3]
+
+
+# -- batched on-device RRF == scalar oracle -----------------------------------
+
+def test_rrf_fuse_batch_matches_scalar_oracle():
+    """Property (seeded fuzz): every row of the on-device fusion equals the
+    scalar `rrf_fuse` — same ids, same order, same float32 scores —
+    including duplicate ids (within and across rankings) and -1 padding.
+    The narrow id range [-1, 12) makes duplicates and cross-ranking
+    collisions the common case, not the exception."""
+    rng = np.random.default_rng(11)
+    for trial in range(150):
+        B = int(rng.integers(1, 6))
+        P1, P2 = (int(x) for x in rng.integers(0, 9, size=2))
+        k = int(rng.integers(1, 12))
+        w = [float(rng.uniform(0.1, 2.0)), float(rng.uniform(0.1, 2.0))]
+        d = rng.integers(-1, 12, size=(B, P1)).astype(np.int32)
+        s = rng.integers(-1, 12, size=(B, P2)).astype(np.int32)
+        fi, fs = rrf_fuse_batch([d, s], weights=w, k=k)
+        fi, fs = np.asarray(fi), np.asarray(fs)
+        assert fi.shape == fs.shape == (B, k)
+        for b in range(B):
+            want = rrf_fuse([d[b].tolist(), s[b].tolist()], weights=w)[:k]
+            got = [(int(i), float(x)) for i, x in zip(fi[b], fs[b])
+                   if i >= 0]
+            assert got == want, (trial, b, got, want)
+            # -1 slots trail the live ones and carry zero scores
+            tail = fi[b][len(got):]
+            assert (tail == -1).all() and (fs[b][len(got):] == 0).all()
+
+
+def test_rrf_fuse_batch_duplicate_ids_do_not_accumulate():
+    d = np.asarray([[5, 7, 5, 5]], np.int32)
+    s = np.asarray([[7, 7, -1]], np.int32)
+    fi, fs = rrf_fuse_batch([d, s], k=4)
+    want = rrf_fuse([[5, 7], [7]])
+    got = [(int(i), float(x)) for i, x in zip(fi[0], fs[0]) if i >= 0]
+    assert got == want
+
+
+def test_rrf_fuse_batch_empty_inputs():
+    fi, fs = rrf_fuse_batch([np.zeros((0, 3), np.int32),
+                             np.zeros((0, 2), np.int32)], k=5)
+    assert fi.shape == (0, 5)
+    fi, fs = rrf_fuse_batch([np.full((2, 0), -1, np.int32),
+                             np.full((2, 0), -1, np.int32)], k=3)
+    assert (np.asarray(fi) == -1).all() and (np.asarray(fs) == 0).all()
+    fi, fs = rrf_fuse_batch([np.full((1, 2), -1, np.int32),
+                             np.asarray([[4, -1]], np.int32)], k=5)
+    assert np.asarray(fi)[0, 0] == 4 and (np.asarray(fi)[0, 1:] == -1).all()
+
+
+# -- service level: the full read path under interleaved mutation -------------
+
+def _session(texts, speaker="u"):
+    return [Message(speaker, t, 1700000000.0) for t in texts]
+
+
+def test_service_batched_equals_sequential_under_interleaved_ops(tmp_path):
+    """retrieve_batch == per-request retrieves (different jit shapes, same
+    engine) after every kind of store mutation: record, evict_superseded,
+    evict, compact, snapshot/restore."""
+    svc = MemoryService(HashEmbedder(), use_kernel=False, budget=800)
+    queries = [("a/c0", "Which city does the user live in?"),
+               ("b/c0", "What pet was adopted?"),
+               ("ghost/c0", "anything?"),
+               ("a/c0", "What is the user's job?")]
+
+    def check(s):
+        batched = s.retrieve_batch(queries)
+        for got, (ns, q) in zip(batched, queries):
+            want = s.retrieve(ns, q)
+            assert got.text == want.text
+            assert [t.text() for t in got.triples] == \
+                [t.text() for t in want.triples]
+
+    svc.record("a/c0", "s0", _session(["I live in Tallinn.",
+                                       "I work as a botanist."]))
+    svc.record("b/c0", "s0", _session(["I adopted a parrot named Olive.",
+                                       "I live in Porto."]))
+    check(svc)
+    svc.record("a/c0", "s1", _session(["I work as a welder."]))
+    svc.evict_superseded("a/c0")          # tombstones the botanist triple
+    check(svc)
+    svc.record("c/c0", "s0", _session(["I collect stamps."]))
+    svc.evict("b/c0")
+    check(svc)
+    svc.compact()
+    check(svc)
+    path = str(tmp_path / "snap.msgpack")
+    svc.snapshot(path)
+    restored = MemoryService.restore(path, HashEmbedder(), use_kernel=False,
+                                     budget=800)
+    check(restored)
+    batched = svc.retrieve_batch(queries)
+    rbatched = restored.retrieve_batch(queries)
+    for got, want in zip(rbatched, batched):
+        assert got.text == want.text
