@@ -7,17 +7,23 @@ fronted by the multi-tenant MemoryService: every user gets an isolated
 namespace in one shared packed bank, chat turns retrieve structured memory
 and record the exchange back through Advanced Augmentation, and the pending
 queries of *all* tenants are answered in one batched retrieval (one embed
-call + one namespace-masked topk_mips launch).  The LM is random-init (this
-box trains ~minutes, not the hours a useful chat model needs) — the demo
-shows the *system*: interception, retrieval, isolation, token accounting,
-batched decode.
+call + one namespace-masked topk_mips launch).  The service is mounted on
+a lifecycle runtime: recorded sessions buffer in a bounded queue that a
+background flusher drains in batched embed calls, every flush journals to
+a write-ahead log in a durable directory, and `service.close()` (via the
+SDK clients' `close()`) writes the final snapshot generation — restart the
+process with the same directory and it recovers where it left off.  The LM
+is random-init (this box trains ~minutes, not the hours a useful chat
+model needs) — the demo shows the *system*: interception, retrieval,
+isolation, token accounting, batched decode, durability.
 """
+import tempfile
 import time
 
 import jax
 
 from repro.configs import get_config
-from repro.core import MemoriClient, MemoryService
+from repro.core import LifecyclePolicy, MemoriClient, MemoryService
 from repro.core.embedder import HashEmbedder
 from repro.data.tokenizer import HashTokenizer
 from repro.models.model_api import Model
@@ -37,7 +43,13 @@ def main():
     def llm(prompt: str) -> str:
         return engine.generate([prompt[-600:]], max_new_tokens=16)[0]
 
-    service = MemoryService(HashEmbedder(), budget=800, use_kernel=False)
+    data_dir = tempfile.mkdtemp(prefix="memori-agent-")
+    service = MemoryService(
+        HashEmbedder(), budget=800, use_kernel=False,
+        data_dir=data_dir,
+        policy=LifecyclePolicy(flush_interval_s=0.1, max_pending=128,
+                               compact_tombstone_ratio=0.3,
+                               snapshot_interval_s=10.0))
     users = {
         "priya/c0": ("Priya", [
             "Hi there! I am Priya.",
@@ -56,10 +68,13 @@ def main():
         for t in turns:
             reply = client.chat(t, timestamp=time.time())
             print(f"{name}: {t}\n  agent: {reply[:60]}")
+        # end_session enqueues into the runtime's bounded queue; the
+        # background flusher drains it — no manual flush loop
         client.end_session()
 
     print("\nservice after sessions:", service.stats())
     # the cross-tenant hot path: both tenants' queries in ONE batched call
+    # (reads are read-your-writes even while sessions sit in the queue)
     batch = [("priya/c0", "What is the name of Priya's pet?"),
              ("marco/c0", "What is the name of Marco's pet?")]
     for (ns, q), ctx in zip(batch, service.retrieve_batch(batch)):
@@ -67,6 +82,9 @@ def main():
         for t in ctx.triples[:3]:
             print(f"   {t.render()}")
     print(f"\nengine stats: {engine.stats}")
+    service.close()          # final flush + snapshot generation
+    print(f"memory durable in {data_dir} "
+          f"(MemoryService.recover picks it up)")
 
 
 if __name__ == "__main__":

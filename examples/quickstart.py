@@ -2,19 +2,34 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-Ingest two chat sessions through Advanced Augmentation, then answer
-questions from the structured memory — and compare the token bill against
-stuffing the full history into the prompt.
+Ingest two chat sessions through Advanced Augmentation, answer questions
+from the structured memory (and compare the token bill against stuffing
+the full history into the prompt) — then lose the process and come back:
+the service runs on a lifecycle runtime journaling every flush to a
+write-ahead log, so a brand-new process recovers the exact same memory
+with `MemoryService.recover` and answers identically.
 """
+import tempfile
 import time
 
-from repro.core import MemoriMemory, Message
+from repro.core import LifecyclePolicy, MemoryService, Message
 from repro.core.baselines import FullContextMemory
 from repro.core.embedder import HashEmbedder
 
+QUESTIONS = ["What does Ana work as now?",
+             "What is the name of Ana's parrot?",
+             "Where did Ben travel to?"]
+
 
 def main():
-    memory = MemoriMemory(HashEmbedder(), budget=1300, use_kernel=False)
+    data_dir = tempfile.mkdtemp(prefix="memori-quickstart-")
+    # the runtime owns everything between requests: durable WAL, background
+    # flusher (drains the queue in ONE batched embed call), auto-compaction
+    # and snapshot rotation — no manual flush() loops anywhere below
+    policy = LifecyclePolicy(flush_interval_s=0.2, max_pending=64,
+                             compact_tombstone_ratio=0.3)
+    memory = MemoryService(HashEmbedder(), budget=1300, use_kernel=False,
+                           policy=policy, data_dir=data_dir)
     full = FullContextMemory()
 
     t0 = time.time() - 14 * 86400
@@ -34,14 +49,14 @@ def main():
         ],
     }
     for sid, msgs in sessions.items():
-        memory.record_session("demo", sid, msgs)
+        # enqueue is O(1); the background flusher batches the extraction +
+        # embedding behind the scenes (reads still see pending sessions)
+        memory.enqueue("demo/c0", sid, msgs)
         full.record_session("demo", sid, msgs)
 
     print("memory stats:", memory.stats(), "\n")
-    for q in ["What does Ana work as now?",
-              "What is the name of Ana's parrot?",
-              "Where did Ben travel to?"]:
-        ctx = memory.retrieve(q)
+    for q in QUESTIONS:
+        ctx = memory.retrieve("demo/c0", q)
         print(f"Q: {q}")
         print(f"  retrieved {len(ctx.triples)} triples, "
               f"{len(ctx.summaries)} summaries, {ctx.token_count} tokens "
@@ -50,9 +65,20 @@ def main():
             print(f"    {t.render()}")
         print()
 
-    prompt, ctx = memory.answer_prompt("What does Ana work as now?")
+    prompt, ctx = memory.answer_prompt("demo/c0", "What does Ana work as now?")
     print("--- assembled LLM prompt (truncated) ---")
     print(prompt[:600])
+
+    # persistence: close (final flush + snapshot), then recover in what
+    # would normally be a fresh process — answers are bit-identical
+    before = [memory.retrieve("demo/c0", q).text for q in QUESTIONS]
+    memory.close()
+    recovered = MemoryService.recover(data_dir, HashEmbedder(),
+                                      use_kernel=False, budget=1300)
+    after = [recovered.retrieve("demo/c0", q).text for q in QUESTIONS]
+    print("\n--- durability ---")
+    print(f"recovered from {data_dir}")
+    print("recovered answers identical:", before == after)
 
 
 if __name__ == "__main__":

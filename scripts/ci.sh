@@ -27,4 +27,11 @@ if [[ "${FAST_ONLY:-0}" != "1" ]]; then
         --steady --json BENCH_retrieval.json
     echo "== BENCH_retrieval.json =="
     cat BENCH_retrieval.json
+
+    echo "== bench: lifecycle soak (flusher + auto-compaction + rotation live) =="
+    # asserts the recovered service answers identically to the live one
+    JAX_PLATFORMS=cpu python benchmarks/lifecycle_bench.py \
+        --seconds 5 --json BENCH_lifecycle.json
+    echo "== BENCH_lifecycle.json =="
+    cat BENCH_lifecycle.json
 fi

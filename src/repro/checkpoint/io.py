@@ -24,8 +24,16 @@ def _path_key(path) -> str:
     return "/".join(out)
 
 
-def save(path: str, tree: PyTree) -> int:
-    """Returns bytes written."""
+def save(path: str, tree: PyTree, *, atomic: bool = False,
+         fsync: bool = False) -> int:
+    """Returns bytes written.
+
+    `atomic=True` routes through `checkpoint.wal.atomic_write_bytes`
+    (tmp + fsync + rename + directory fsync — one audited implementation
+    of the crash-durable write), so readers and crash recovery only ever
+    see a complete checkpoint under `path`; it implies `fsync`.  Plain
+    `fsync=True` flushes an in-place write to stable storage.  The
+    lifecycle runtime's snapshot rotation uses `atomic=True`."""
     entries = {}
     def rec(p, leaf):
         arr = np.asarray(leaf)
@@ -38,8 +46,15 @@ def save(path: str, tree: PyTree) -> int:
     jax.tree_util.tree_map_with_path(rec, tree)
     blob = msgpack.packb(entries, use_bin_type=True)
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    if atomic:
+        from repro.checkpoint.wal import atomic_write_bytes
+        atomic_write_bytes(path, blob)
+        return len(blob)
     with open(path, "wb") as f:
         f.write(blob)
+        if fsync:
+            f.flush()
+            os.fsync(f.fileno())
     return len(blob)
 
 

@@ -1,0 +1,217 @@
+"""Segmented write-ahead log for the memory store's lifecycle runtime.
+
+One directory holds the full durable state of a `MemoryStore`:
+
+    <dir>/
+      MANIFEST.msgpack            advisory index (retained generations)
+      snapshot-00000007.msgpack   full-store snapshot, name encodes the WAL
+                                  seq it covers ("everything through seq 7")
+      wal-00000008.msgpack        one segment per durable mutation after it
+      wal-00000009.msgpack
+
+Every append and every snapshot is written **atomically**: the bytes go to a
+`*.tmp` sibling, are fsync'd, and are `os.replace`d into the final name (the
+directory is fsync'd after the rename), so a crash at any instant leaves
+either the complete file or no file — never a torn segment under its real
+name.  Each segment is self-describing (version + seq + CRC32 of the
+payload), so recovery validates what it reads instead of trusting it.
+
+Recovery = newest restorable snapshot + ordered replay of the segments with
+seq greater than the snapshot's coverage.  Rotation writes a fresh snapshot,
+re-points the manifest, prunes snapshot generations beyond the retention
+count, and only then truncates WAL segments — and only those at or below the
+coverage of the *oldest retained* snapshot, so every retained generation can
+still be brought fully up to date from the segments that remain.
+
+The log stores opaque msgpack records; what they mean is the store's
+business (`MemoryStore.wal_record types`, replayed by `MemoryStore.
+apply_wal`).  See docs/OPERATIONS.md for the operator view and
+docs/STORAGE.md for the record format.
+"""
+from __future__ import annotations
+
+import os
+import re
+import warnings
+import zlib
+from typing import Iterator, List, Optional, Tuple
+
+import msgpack
+
+SEGMENT_VERSION = 1
+MANIFEST_NAME = "MANIFEST.msgpack"
+_SEG_RE = re.compile(r"^wal-(\d{8})\.msgpack$")
+_SNAP_RE = re.compile(r"^snapshot-(\d{8})\.msgpack$")
+
+
+def fsync_dir(path: str) -> None:
+    """Flush a directory entry table (the rename durability point)."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def atomic_write_bytes(path: str, blob: bytes) -> None:
+    """tmp + fsync + rename + dir-fsync: the file exists completely or not
+    at all, and survives power loss once this returns."""
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(blob)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    fsync_dir(os.path.dirname(os.path.abspath(path)))
+
+
+class CorruptSegmentError(RuntimeError):
+    """A WAL segment failed validation (bad version, seq, or checksum)."""
+
+
+class WriteAheadLog:
+    def __init__(self, dirpath: str):
+        self.dir = os.path.abspath(dirpath)
+        os.makedirs(self.dir, exist_ok=True)
+        # seq numbering continues past everything ever named on disk —
+        # including snapshots' coverage, so a post-recovery append can never
+        # collide with a truncated-away segment's seq
+        tail = max(self.segment_seqs(), default=0)
+        snaps = max((s for s, _ in self.snapshots()), default=0)
+        self._next_seq = max(tail, snaps) + 1
+
+    # -- paths -------------------------------------------------------------
+    def _seg_path(self, seq: int) -> str:
+        return os.path.join(self.dir, f"wal-{seq:08d}.msgpack")
+
+    def snapshot_path(self, wal_through: int) -> str:
+        """The snapshot file covering every segment with seq <=
+        `wal_through` (the coverage is encoded in the name, so recovery
+        needs no manifest to pair snapshots with segments)."""
+        return os.path.join(self.dir, f"snapshot-{wal_through:08d}.msgpack")
+
+    # -- scan --------------------------------------------------------------
+    def segment_seqs(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            m = _SEG_RE.match(name)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def snapshots(self) -> List[Tuple[int, str]]:
+        """[(wal_through, path)] sorted oldest -> newest."""
+        out = []
+        for name in os.listdir(self.dir):
+            m = _SNAP_RE.match(name)
+            if m:
+                out.append((int(m.group(1)), os.path.join(self.dir, name)))
+        return sorted(out)
+
+    def latest_snapshot(self) -> Optional[Tuple[int, str]]:
+        snaps = self.snapshots()
+        return snaps[-1] if snaps else None
+
+    @property
+    def last_seq(self) -> int:
+        """Seq of the most recently appended segment (0 if none ever)."""
+        return self._next_seq - 1
+
+    # -- append ------------------------------------------------------------
+    def append(self, record: dict) -> int:
+        """Durably append one record as its own segment.  Returns the seq.
+        When this returns, the record survives kill -9 / power loss."""
+        seq = self._next_seq
+        payload = msgpack.packb(record, use_bin_type=True)
+        envelope = msgpack.packb({
+            "version": SEGMENT_VERSION,
+            "seq": seq,
+            "crc": zlib.crc32(payload),
+            "payload": payload,
+        }, use_bin_type=True)
+        atomic_write_bytes(self._seg_path(seq), envelope)
+        self._next_seq = seq + 1
+        return seq
+
+    # -- read / replay -----------------------------------------------------
+    def read_segment(self, seq: int) -> dict:
+        """Decode + validate one segment; raises CorruptSegmentError."""
+        with open(self._seg_path(seq), "rb") as f:
+            raw = f.read()
+        try:
+            env = msgpack.unpackb(raw, raw=False)
+            version, crc = env["version"], env["crc"]
+            payload = env["payload"]
+        except Exception as e:
+            raise CorruptSegmentError(f"segment {seq}: undecodable ({e})")
+        if version != SEGMENT_VERSION:
+            raise CorruptSegmentError(
+                f"segment {seq}: version {version} != {SEGMENT_VERSION}")
+        if env.get("seq") != seq:
+            raise CorruptSegmentError(
+                f"segment file {seq} claims seq {env.get('seq')}")
+        if zlib.crc32(payload) != crc:
+            raise CorruptSegmentError(f"segment {seq}: checksum mismatch")
+        return msgpack.unpackb(payload, raw=False)
+
+    def replay_records(self, after_seq: int = 0
+                       ) -> Iterator[Tuple[int, dict]]:
+        """Yield (seq, record) in order for every valid segment with
+        seq > after_seq.  Replay stops at the first invalid segment (with a
+        warning): everything after an undecodable record has unknown
+        provenance and must not be applied."""
+        for seq in self.segment_seqs():
+            if seq <= after_seq:
+                continue
+            try:
+                rec = self.read_segment(seq)
+            except CorruptSegmentError as e:
+                warnings.warn(f"WAL replay stopped: {e}", stacklevel=2)
+                return
+            yield seq, rec
+
+    # -- rotation ----------------------------------------------------------
+    def commit_snapshot(self, wal_through: int, retain: int = 2) -> dict:
+        """Called after the snapshot file for `wal_through` is atomically in
+        place: re-point the manifest, prune generations beyond `retain`, and
+        truncate segments no retained generation still needs.  Returns a
+        summary dict (snapshots kept, segments dropped)."""
+        snaps = self.snapshots()
+        if wal_through not in [s for s, _ in snaps]:
+            raise FileNotFoundError(
+                f"no snapshot file for wal_through={wal_through}")
+        keep = snaps[-retain:] if retain else snaps
+        self.write_manifest(keep)
+        dropped_snaps = 0
+        for through, path in snaps[:-retain] if retain else []:
+            os.unlink(path)
+            dropped_snaps += 1
+        # only segments every retained snapshot already covers may go
+        oldest_covered = min(s for s, _ in keep)
+        dropped_segs = 0
+        for seq in self.segment_seqs():
+            if seq <= oldest_covered:
+                os.unlink(self._seg_path(seq))
+                dropped_segs += 1
+        fsync_dir(self.dir)
+        return {"retained_snapshots": len(keep),
+                "dropped_snapshots": dropped_snaps,
+                "truncated_segments": dropped_segs}
+
+    # -- manifest (advisory: recovery trusts the directory scan) -----------
+    def write_manifest(self, snaps: List[Tuple[int, str]]) -> None:
+        atomic_write_bytes(os.path.join(self.dir, MANIFEST_NAME),
+                           msgpack.packb({
+                               "version": SEGMENT_VERSION,
+                               "snapshots": [
+                                   {"wal_through": s,
+                                    "name": os.path.basename(p)}
+                                   for s, p in snaps],
+                           }, use_bin_type=True))
+
+    def read_manifest(self) -> Optional[dict]:
+        path = os.path.join(self.dir, MANIFEST_NAME)
+        if not os.path.exists(path):
+            return None
+        with open(path, "rb") as f:
+            return msgpack.unpackb(f.read(), raw=False)

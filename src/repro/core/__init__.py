@@ -3,6 +3,8 @@
 # sharded vector index + hashed BM25, token budgeting, and the SDK wrapper.
 from repro.core.augmentation import AdvancedAugmentation  # noqa: F401
 from repro.core.extraction import LMExtractor, Message, RuleExtractor  # noqa: F401
+from repro.core.lifecycle import (BackpressureError, LifecyclePolicy,  # noqa: F401
+                                  LifecycleRuntime)
 from repro.core.memory import ANSWER_PROMPT, MemoriMemory, RetrievedContext  # noqa: F401
 from repro.core.sdk import MemoriClient  # noqa: F401
 from repro.core.service import MemoryService, NamespaceView  # noqa: F401

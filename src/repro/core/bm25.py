@@ -9,8 +9,12 @@ oracle in tests/).
 
 Storage is a preallocated capacity-doubling row block (like VectorIndex):
 `add` writes into the next free slots in amortized O(1) per document, and
-the device-side arrays are cached views of the filled prefix — no O(N)
-re-stack per post-add query.
+the device-side doc/length arrays are capacity-padded buffers updated IN
+PLACE on append (donated `dynamic_update_slice`, update width padded to a
+power of two) — steady-state scoring re-uploads nothing and keeps stable
+`(B, capacity)` shapes while the corpus grows within a capacity bucket, so
+a background flusher appending documents every interval neither re-stacks
+the corpus nor mints new executables per document count.
 
 Multi-tenant extension: documents may carry a namespace tag (one per call
 or one per document), and scoring can be scoped to one namespace — df, N,
@@ -26,13 +30,24 @@ the old→new id mapping.
 """
 from __future__ import annotations
 
+import functools
 from typing import List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.common.utils import next_pow2 as _next_pow2
 from repro.data.tokenizer import HashTokenizer, default_tokenizer
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _dev_append(docs, lens, new_docs, new_lens, start):
+    """Write new doc rows + lengths at [start, start+m) in place (the
+    capacity-resident mirror of VectorIndex._dev_append)."""
+    docs = jax.lax.dynamic_update_slice(docs, new_docs, (start, 0))
+    lens = jax.lax.dynamic_update_slice(lens, new_lens, (start,))
+    return docs, lens
 
 
 class BM25Index:
@@ -47,7 +62,9 @@ class BM25Index:
         self._lens = np.ones((capacity,), np.float32)
         self._ns = np.full((capacity,), -1, np.int32)   # -1 == untagged
         self._alive = np.zeros((capacity,), bool)
-        self._cached_n = -1                              # device-cache key
+        # capacity-resident device buffers (lazily uploaded once per
+        # capacity, then updated in place on add)
+        self._cached_cap = -1                            # device-cache key
         self._docs_dev = None
         self._lens_dev = None
 
@@ -68,6 +85,12 @@ class BM25Index:
         alive = np.zeros((cap,), bool)
         alive[: self.n] = self._alive[: self.n]
         self._docs, self._lens, self._ns, self._alive = docs, lens, ns, alive
+        self._invalidate_device()         # re-upload once per doubling
+
+    def _invalidate_device(self) -> None:
+        self._docs_dev = None
+        self._lens_dev = None
+        self._cached_cap = -1
 
     def add(self, texts: Sequence[str],
             namespace: Union[int, Sequence[int], None] = None) -> List[int]:
@@ -82,6 +105,7 @@ class BM25Index:
                 raise ValueError(
                     f"{len(ns_per_doc)} namespace tags for {m} documents")
         self._grow(m)
+        n0 = self.n
         ids = []
         for t, ns in zip(texts, ns_per_doc):
             tok = self.tokenizer.encode(t)[: self.max_doc_len]
@@ -93,6 +117,15 @@ class BM25Index:
             self._alive[i] = True
             self.n += 1
             ids.append(i)
+        if m and self._docs_dev is not None:
+            # in-place device append, width padded to a power of two (the
+            # pad rows read back the -1/1.0 defaults they already hold)
+            cap = self._docs.shape[0]
+            m_pad = max(m, min(_next_pow2(m), cap - n0))
+            self._docs_dev, self._lens_dev = _dev_append(
+                self._docs_dev, self._lens_dev,
+                jnp.asarray(self._docs[n0: n0 + m_pad]),
+                jnp.asarray(self._lens[n0: n0 + m_pad]), jnp.int32(n0))
         return ids
 
     def remove(self, ids: Sequence[int]) -> int:
@@ -108,14 +141,16 @@ class BM25Index:
     def compact(self) -> np.ndarray:
         """Physically drop tombstoned documents.  Returns the old→new id
         mapping as an (n_old,) int64 array (-1 for dropped docs); the kept
-        docs keep their relative order."""
+        docs keep their relative order.  Capacity is sticky (like
+        VectorIndex.compact): scoring shapes stay keyed on the same bucket
+        across auto-compactions."""
         n_old = self.n
         alive = self._alive[:n_old]
         old_to_new = np.full((n_old,), -1, np.int64)
         keep = np.where(alive)[0]
         old_to_new[keep] = np.arange(keep.size)
         n_new = int(keep.size)
-        cap = max(64, 1 << max(0, int(n_new - 1).bit_length()))
+        cap = self._docs.shape[0]
         docs = np.full((cap, self.max_doc_len), -1, np.int32)
         docs[:n_new] = self._docs[keep]
         lens = np.ones((cap,), np.float32)
@@ -127,7 +162,7 @@ class BM25Index:
         self._docs, self._lens, self._ns, self._alive = \
             docs, lens, ns, alive_new
         self.n = n_new
-        self._cached_n = -1
+        self._invalidate_device()
         return old_to_new
 
     # -- snapshot surface (see core/store.py) ------------------------------
@@ -151,16 +186,17 @@ class BM25Index:
             raise ValueError(f"doc width {docs.shape[1]} != "
                              f"max_doc_len {self.max_doc_len}")
         self.n = 0
-        self._docs = np.full((max(64, n), self.max_doc_len), -1, np.int32)
-        self._lens = np.ones((max(64, n),), np.float32)
-        self._ns = np.full((max(64, n),), -1, np.int32)
-        self._alive = np.zeros((max(64, n),), bool)
+        cap = max(64, _next_pow2(n))
+        self._docs = np.full((cap, self.max_doc_len), -1, np.int32)
+        self._lens = np.ones((cap,), np.float32)
+        self._ns = np.full((cap,), -1, np.int32)
+        self._alive = np.zeros((cap,), bool)
         self._docs[:n] = docs
         self._lens[:n] = np.asarray(lens, np.float32)
         self._ns[:n] = np.asarray(ns, np.int32)
         self._alive[:n] = np.asarray(alive, bool)
         self.n = n
-        self._cached_n = -1
+        self._invalidate_device()
 
     def __len__(self):
         return self.n
@@ -170,12 +206,14 @@ class BM25Index:
         return int(self._alive[: self.n].sum())
 
     def _arrays(self):
-        """Cached device views of the filled prefix — rebuilt only when
-        documents were appended, never per-query."""
-        if self._cached_n != self.n:
-            self._docs_dev = jnp.asarray(self._docs[: self.n])
-            self._lens_dev = jnp.asarray(self._lens[: self.n])
-            self._cached_n = self.n
+        """Capacity-padded device buffers — uploaded once per capacity
+        bucket (first query, or after grow/compact/load), then updated in
+        place by `add`.  Never rebuilt per query or per append."""
+        cap = self._docs.shape[0]
+        if self._cached_cap != cap or self._docs_dev is None:
+            self._docs_dev = jnp.asarray(self._docs)
+            self._lens_dev = jnp.asarray(self._lens)
+            self._cached_cap = cap
         return self._docs_dev, self._lens_dev
 
     def _selection(self, namespace: Optional[int]) -> np.ndarray:
@@ -194,30 +232,40 @@ class BM25Index:
         if self.n == 0:
             return jnp.zeros((0,), jnp.float32)
         sel = self._selection(namespace)
-        return self._scores_batch([self._terms(query)], sel[None])[0]
+        return self._scores_batch([self._terms(query)],
+                                  sel[None])[0][: self.n]
 
     def _terms(self, query: str) -> List[int]:
         return list(dict.fromkeys(self.tokenizer.encode(query)))
 
     def _scores_batch(self, term_lists: Sequence[List[int]],
-                      sels: np.ndarray) -> jnp.ndarray:
+                      sels: np.ndarray, sel_dev=None) -> jnp.ndarray:
         """Stacked scoring: B scoped queries against the whole corpus in one
-        device op -> (B, N) f32.  `sels` is the (B, N) per-query selection
-        mask.  Term frequencies are computed ONCE over the union of all
+        device op -> (B, capacity) f32 (unfilled/unselected slots score 0).
+        `sels` is the (B, n) per-query selection mask over the filled
+        prefix; `sel_dev` optionally passes its capacity-padded device
+        upload in (so topk_batch_dev builds/transfers the mask once).
+        Term frequencies are computed ONCE over the union of all
         query terms and gathered per query, so the corpus is streamed once
         for the whole batch; df/idf/avg_len stay per-query (computed over
         each query's own selection, matching an isolated index's
-        statistics)."""
+        statistics).  Every device shape here is keyed on the capacity, not
+        the doc count — appends within a bucket reuse the same executables."""
         B = len(term_lists)
         N = self.n
         if N == 0:
             return jnp.zeros((B, 0), jnp.float32)
-        docs, lens = self._arrays()
+        docs, lens = self._arrays()                        # (cap, L), (cap,)
+        cap = self._docs.shape[0]
+        if sel_dev is None:
+            sel_pad = np.zeros((B, cap), bool)
+            sel_pad[:, :N] = sels
+            sel_dev = jnp.asarray(sel_pad)
         n_sel = sels.sum(axis=1)                                  # (B,)
         union = list(dict.fromkeys(t for ts in term_lists for t in ts))
         live = [b for b in range(B) if term_lists[b] and n_sel[b]]
         if not union or not live:
-            return jnp.zeros((B, N), jnp.float32)
+            return jnp.zeros((B, cap), jnp.float32)
         uidx = {t: i for i, t in enumerate(union)}
         T = max(len(ts) for ts in term_lists)
         idx = np.zeros((B, T), np.int32)
@@ -225,11 +273,10 @@ class BM25Index:
         for b, ts in enumerate(term_lists):
             idx[b, : len(ts)] = [uidx[t] for t in ts]
             valid[b, : len(ts)] = 1.0
-        # tf over the union, once for the whole batch: (N, U)
+        # tf over the union, once for the whole batch: (cap, U)
         tf_u = jnp.stack([(docs == t).sum(axis=1).astype(jnp.float32)
                           for t in union], axis=1)
-        G = tf_u[:, jnp.asarray(idx)]                             # (N, B, T)
-        sel_dev = jnp.asarray(sels)
+        G = tf_u[:, jnp.asarray(idx)]                             # (cap, B, T)
         # the single device sync per batch: per-query df over its selection
         df = np.asarray(jnp.einsum("nbt,bn->bt",
                                    (G > 0).astype(jnp.float32),
@@ -245,8 +292,8 @@ class BM25Index:
         norm = self.k1 * (1.0 - self.b
                           + self.b * lens[None, :] / jnp.asarray(avg)[:, None])
         contrib = (jnp.asarray(idf)[None, :, :] * G * (self.k1 + 1.0)
-                   / (G + jnp.swapaxes(norm, 0, 1)[:, :, None]))   # (N, B, T)
-        out = jnp.swapaxes(contrib.sum(axis=2), 0, 1)              # (B, N)
+                   / (G + jnp.swapaxes(norm, 0, 1)[:, :, None]))   # (cap, B, T)
+        out = jnp.swapaxes(contrib.sum(axis=2), 0, 1)              # (B, cap)
         row_live = jnp.asarray(
             np.asarray([bool(term_lists[b]) and bool(n_sel[b])
                         for b in range(B)]))[:, None]
@@ -276,9 +323,16 @@ class BM25Index:
         if namespaces is None:
             namespaces = [None] * B
         sels = np.stack([self._selection(ns) for ns in namespaces])
-        S = self._scores_batch([self._terms(q) for q in queries], sels)
-        key = jnp.where(jnp.asarray(sels), S, -jnp.inf)
-        kk = min(k, self.n)
+        sel_pad = np.zeros((B, self._docs.shape[0]), bool)
+        sel_pad[:, : self.n] = sels
+        sel_dev = jnp.asarray(sel_pad)     # built + uploaded once, shared
+        S = self._scores_batch([self._terms(q) for q in queries], sels,
+                               sel_dev=sel_dev)
+        key = jnp.where(sel_dev, S, -jnp.inf)
+        # k clamps to the CAPACITY, not the doc count: unfilled slots are
+        # -inf-masked into (0, -1) anyway, and keying the top-k width on
+        # capacity keeps one executable while the corpus grows in a bucket
+        kk = min(k, self._docs.shape[0])
         s, idx = jax.lax.top_k(key, kk)
         live = s > -jnp.inf
         s = jnp.where(live, s, 0.0)

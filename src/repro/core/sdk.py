@@ -57,3 +57,21 @@ class MemoriClient:
     def context_tokens(self, user_text: str) -> int:
         """The Table-2 metric: tokens injected for this query."""
         return self.memory.retrieve(user_text).token_count
+
+    def close(self) -> None:
+        """Record any buffered turns, then shut the memory layer down
+        cleanly if it is closable (a NamespaceView over a lifecycle-mounted
+        MemoryService forwards to `service.close()`: final flush + snapshot
+        rotation).  With the runtime's background flusher there is no need
+        to call `end_session` in a loop — buffered sessions drain on their
+        own; `close()` is the one call a well-behaved client owes on exit."""
+        self.end_session()
+        closer = getattr(self.memory, "close", None)
+        if callable(closer):
+            closer()
+
+    def __enter__(self) -> "MemoriClient":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -22,6 +22,18 @@ Storage — the packed bank, the BM25 corpus, the per-tenant triple/summary
 stores and the row↔namespace↔triple mapping — lives in `core/store.py`'s
 MemoryStore, which also provides `compact()` (tombstone reclamation with
 row-id remapping) and `snapshot()` / `MemoryService.restore()` persistence.
+Everything that happens *between* requests — WAL-backed incremental
+persistence, the time-based background flusher with backpressure,
+auto-compaction and snapshot rotation — lives in `core/lifecycle.py`'s
+LifecycleRuntime; pass `policy=`/`data_dir=` to mount one (or
+`MemoryService.recover(data_dir, ...)` to come back after a crash), and the
+service routes writes, maintenance and the read path through its lock.
+
+Public-facing batch sizes are ragged, so `retrieve_batch` pads every batch
+to the next power-of-two Q bucket (padded queries carry a never-assigned
+namespace id and match nothing): the whole read path — masked `topk_mips`,
+stacked BM25, on-device RRF — sees only bucketed shapes, bounding the
+executable count regardless of traffic shape.
 
 Isolation invariants:
   * a triple recorded under namespace A can never surface for namespace B
@@ -36,14 +48,17 @@ and the serving launchers run against the service unchanged.
 """
 from __future__ import annotations
 
+import contextlib
 import warnings
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.common.utils import next_pow2
 from repro.core.budget import TokenBudgeter
 from repro.core.extraction import Extractor, Message
 from repro.core.hybrid import rrf_fuse_batch
+from repro.core.lifecycle import LifecyclePolicy, LifecycleRuntime
 from repro.core.memory import ANSWER_PROMPT, MemoriMemory, RetrievedContext
 from repro.core.store import MemoryStore
 from repro.core.summaries import Summary
@@ -58,7 +73,12 @@ class MemoryService:
                  use_kernel: bool = True,
                  dense_weight: float = 1.0, sparse_weight: float = 0.7,
                  pool: int = 64, flush_every: Optional[int] = None,
-                 store: Optional[MemoryStore] = None):
+                 store: Optional[MemoryStore] = None,
+                 policy: Optional[LifecyclePolicy] = None,
+                 data_dir: Optional[str] = None,
+                 runtime: Optional[LifecycleRuntime] = None):
+        if store is None and runtime is not None:
+            store = runtime.store
         if store is None:
             if embedder is None:
                 raise ValueError("MemoryService needs an embedder or a store")
@@ -74,6 +94,18 @@ class MemoryService:
         self.sparse_weight = sparse_weight
         self.pool = pool
         self.flush_every = flush_every
+        if runtime is not None:
+            if runtime.store is not self.store:
+                raise ValueError("runtime is mounted on a different store")
+        elif policy is not None or data_dir is not None:
+            runtime = LifecycleRuntime(self.store, data_dir=data_dir,
+                                       policy=policy)
+        self.runtime = runtime
+
+    def _guard(self):
+        """The runtime's lock when one is mounted (serializes requests
+        against background flush/compaction/rotation), else a no-op."""
+        return self.runtime.lock if self.runtime else contextlib.nullcontext()
 
     # the underlying indices, exposed for tests/benchmarks and the SDK
     @property
@@ -98,14 +130,55 @@ class MemoryService:
                                     tokenizer=tokenizer)
         return cls(store=store, **service_kwargs)
 
+    @classmethod
+    def recover(cls, data_dir: str, embedder,
+                extractor: Optional[Extractor] = None,
+                policy: Optional[LifecyclePolicy] = None,
+                use_kernel: bool = True, dim: int = 256,
+                tokenizer: HashTokenizer | None = None,
+                **service_kwargs) -> "MemoryService":
+        """Rebuild a service from a lifecycle runtime's durable directory:
+        newest restorable snapshot + ordered WAL replay.  The recovered
+        service answers `retrieve_batch` bit-identically to the pre-crash
+        one up to the last durable flush, and keeps journaling to the same
+        directory.  `dim` matters only when the directory holds no
+        snapshot yet (the fresh replay store must match the embedder)."""
+        rt = LifecycleRuntime.recover(data_dir, embedder,
+                                      extractor=extractor, policy=policy,
+                                      use_kernel=use_kernel, dim=dim,
+                                      tokenizer=tokenizer)
+        return cls(runtime=rt, **service_kwargs)
+
     def snapshot(self, path: str) -> int:
-        """Flush pending writes, then persist the whole store.  Returns
-        bytes written."""
-        return self.store.snapshot(path)
+        """Flush pending writes, then persist the whole store to an
+        explicit path (manual escape hatch — a mounted runtime's rotation
+        is `rotate()`).  Returns bytes written."""
+        with self._guard():
+            return self.store.snapshot(path)
+
+    def rotate(self) -> dict:
+        """Snapshot rotation through the mounted runtime: full snapshot,
+        retention pruning, WAL truncation."""
+        if self.runtime is None:
+            raise RuntimeError("rotate() needs a mounted LifecycleRuntime")
+        return self.runtime.rotate()
+
+    def close(self, *, final_snapshot: bool = True) -> None:
+        """Stop the background runtime (final flush + snapshot when
+        durable).  Safe to call on a runtime-less service.  Idempotent."""
+        if self.runtime is not None:
+            self.runtime.close(final_snapshot=final_snapshot)
+
+    def __enter__(self) -> "MemoryService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # -- tenancy -----------------------------------------------------------
     def namespaces(self) -> List[str]:
-        return self.store.namespaces()
+        with self._guard():
+            return self.store.namespaces()
 
     def namespace(self, name: str) -> "NamespaceView":
         return NamespaceView(self, name)
@@ -115,25 +188,40 @@ class MemoryService:
                messages: Sequence[Message]) -> Tuple[List[Triple], Summary]:
         """Synchronous ingest of one session: enqueue + flush (one write
         path — anything else pending is drained in the same batch)."""
-        return self.store.ingest(namespace, session_id, messages)
+        with self._guard():
+            if self.runtime is not None:
+                if self.runtime.closed:
+                    raise RuntimeError(
+                        "service is closed: writes would bypass the "
+                        "journal (recover/remount before writing again)")
+                self.runtime.note_activity()
+            return self.store.ingest(namespace, session_id, messages)
 
     def enqueue(self, namespace: str, session_id: str,
                 messages: Sequence[Message]) -> None:
         """Async ingest: queue the session for the next `flush()`.  No
-        extraction or embedding happens here.  When `flush_every` is set,
-        reaching that many pending sessions triggers an automatic flush."""
-        self.store.enqueue(namespace, session_id, messages)
+        extraction or embedding happens here.  With a mounted runtime the
+        queue is bounded and backpressured per policy (the background
+        flusher drains it); `flush_every` additionally triggers a
+        count-based flush."""
+        if self.runtime is not None:
+            self.runtime.enqueue(namespace, session_id, messages)
+        else:
+            self.store.enqueue(namespace, session_id, messages)
         if self.flush_every and self.store.pending_count >= self.flush_every:
             self.flush()
 
     def flush(self) -> int:
         """Drain all pending sessions (all tenants) through one embed call
         and one bank append.  Returns the number of sessions ingested."""
+        if self.runtime is not None:
+            return self.runtime.flush()
         return len(self.store.flush())
 
     def compact(self) -> dict:
         """Reclaim tombstoned rows (see MemoryStore.compact)."""
-        return self.store.compact()
+        with self._guard():
+            return self.store.compact()
 
     # -- read path -------------------------------------------------------------
     def retrieve(self, namespace: str, query: str,
@@ -152,51 +240,79 @@ class MemoryService:
         request at once; the (B, k) fused ranking crosses to the host in a
         single transfer.  Reads are read-your-writes: pending enqueued
         sessions are flushed first.  The per-request results are identical
-        to sequential retrieve() calls."""
+        to sequential retrieve() calls.
+
+        Q-shape bucketing: the batch is padded to the next power-of-two
+        size before it touches the device (padded queries carry a
+        never-assigned namespace id, so they match no row on either side
+        and fuse to all -1); a public endpoint serving ragged batch sizes
+        therefore mints at most log2(max_B) executables per stage instead
+        of one per distinct B."""
         if not requests:
             return []
-        if self.store.pending_count:
-            self.store.flush()
-        k = top_k or self.top_k
-        # reads never allocate tenant state: unknown namespaces stay unknown
-        # (no leak from typo'd/adversarial queries, evict() stays evicted)
-        tenants = [self.store.get(ns) for ns, _ in requests]
+        # query embedding depends only on the request texts — keep the
+        # (possibly slow, possibly remote) embed call OUTSIDE the runtime
+        # lock so it never stalls the flusher or blocked enqueuers
         qvecs = self.embedder.embed_texts([q for _, q in requests])
-        vindex = self.store.vindex
-        B = len(requests)
-        if vindex.n:
-            # unknown tenants get a never-assigned ns id (>= 0, so it can't
-            # collide with the -1 tombstone label): they match no bank row
-            # on the dense side and select no documents on the sparse side
-            unused = self.store.namespace_id_count()
-            ns_ids = [t.ns_id if t else unused for t in tenants]
-            q_ns = np.asarray(ns_ids, np.int32)
-            _, dense_ids = vindex.search_batch(qvecs, q_ns, k=self.pool)
-            _, sparse_ids = self.store.bm25.topk_batch_dev(
-                [q for _, q in requests], k=self.pool, namespaces=ns_ids)
-            fused_ids, fused_scores = rrf_fuse_batch(
-                [dense_ids, sparse_ids],
-                weights=[self.dense_weight, self.sparse_weight], k=k)
-            fused_ids = np.asarray(fused_ids)
-            fused_scores = np.asarray(fused_scores)
-        else:
-            fused_ids = np.full((B, k), -1, np.int32)
-            fused_scores = np.zeros((B, k), np.float32)
-        out: List[RetrievedContext] = []
-        for r, ((ns, qtext), t) in enumerate(zip(requests, tenants)):
-            if t is None:
-                text = MemoriMemory.render([], [])
-                out.append(RetrievedContext([], [], text,
+        with self._guard():
+            if self.runtime is not None:
+                self.runtime.note_activity()
+            if self.store.pending_count:
+                # through the runtime when mounted: the read-your-writes
+                # drain counts as a flush and wakes blocked enqueuers
+                self.flush()
+            k = top_k or self.top_k
+            # reads never allocate tenant state: unknown namespaces stay
+            # unknown (no leak from typo'd/adversarial queries, evict()
+            # stays evicted)
+            tenants = [self.store.get(ns) for ns, _ in requests]
+            vindex = self.store.vindex
+            B = len(requests)
+            if vindex.n:
+                # unknown tenants get a never-assigned ns id (>= 0, so it
+                # can't collide with the -1 tombstone label): they match no
+                # bank row on the dense side and select no documents on the
+                # sparse side.  Padded queries reuse the same id.
+                unused = self.store.namespace_id_count()
+                ns_ids = [t.ns_id if t else unused for t in tenants]
+                Bp = next_pow2(B)
+                qvecs = np.asarray(qvecs, np.float32)
+                if Bp > B:
+                    qvecs = np.concatenate(
+                        [qvecs, np.zeros((Bp - B, qvecs.shape[1]),
+                                         np.float32)])
+                ns_pad = ns_ids + [unused] * (Bp - B)
+                q_ns = np.asarray(ns_pad, np.int32)
+                _, dense_ids = vindex.search_batch(qvecs, q_ns, k=self.pool)
+                _, sparse_ids = self.store.bm25.topk_batch_dev(
+                    [q for _, q in requests] + [""] * (Bp - B),
+                    k=self.pool, namespaces=ns_pad)
+                fused_ids, fused_scores = rrf_fuse_batch(
+                    [dense_ids, sparse_ids],
+                    weights=[self.dense_weight, self.sparse_weight], k=k)
+                fused_ids = np.asarray(fused_ids)[:B]
+                fused_scores = np.asarray(fused_scores)[:B]
+            else:
+                fused_ids = np.full((B, k), -1, np.int32)
+                fused_scores = np.zeros((B, k), np.float32)
+            # result assembly stays under the guard: the fused global row
+            # ids are only valid until the next compaction remaps them
+            out: List[RetrievedContext] = []
+            for r, ((ns, qtext), t) in enumerate(zip(requests, tenants)):
+                if t is None:
+                    text = MemoriMemory.render([], [])
+                    out.append(RetrievedContext([], [], text,
+                                                self.tokenizer.count(text)))
+                    continue
+                scored = [(t.triples.get(self.store.row_tid(int(g))),
+                           float(s))
+                          for g, s in zip(fused_ids[r], fused_scores[r])
+                          if g >= 0]
+                ctx = self.budgeter.select(scored, t.summaries)
+                text = MemoriMemory.render(ctx.triples, ctx.summaries)
+                out.append(RetrievedContext(ctx.triples, ctx.summaries, text,
                                             self.tokenizer.count(text)))
-                continue
-            scored = [(t.triples.get(self.store.row_tid(int(g))), float(s))
-                      for g, s in zip(fused_ids[r], fused_scores[r])
-                      if g >= 0]
-            ctx = self.budgeter.select(scored, t.summaries)
-            text = MemoriMemory.render(ctx.triples, ctx.summaries)
-            out.append(RetrievedContext(ctx.triples, ctx.summaries, text,
-                                        self.tokenizer.count(text)))
-        return out
+            return out
 
     def answer_prompt(self, namespace: str, question: str
                       ) -> Tuple[str, RetrievedContext]:
@@ -208,25 +324,40 @@ class MemoryService:
     def evict(self, namespace: str) -> int:
         """Drop a whole tenant: tombstone its bank rows + BM25 docs, free its
         stores.  Returns the number of rows evicted."""
-        return self.store.evict_namespace(namespace)
+        with self._guard():
+            return self.store.evict_namespace(namespace)
 
     def evict_superseded(self, namespace: str) -> int:
         """Physically evict triples superseded under conflict resolution
         (triples.latest_for_key keeps the newest version of every
         (subject, predicate) key; the older versions leave the indices)."""
-        return self.store.evict_superseded(namespace)
+        with self._guard():
+            return self.store.evict_superseded(namespace)
 
     # -- stats ----------------------------------------------------------------------
     def stats(self) -> dict:
-        return self.store.stats()
+        """Store counters plus the operator's runtime view: `pending_depth`
+        (buffered sessions), `wal_segments` (un-truncated log segments on
+        disk) and `last_snapshot_age_s` (None until a snapshot exists)."""
+        with self._guard():
+            st = self.store.stats()
+            if self.runtime is not None:
+                st.update(self.runtime.stats())
+            else:
+                st.update({"pending_depth": st["pending"],
+                           "wal_segments": 0,
+                           "last_snapshot_age_s": None})
+            return st
 
     def namespace_stats(self, namespace: str) -> dict:
         """Public per-namespace counters (no reaching into tenant state)."""
-        t = self.store.get(namespace)
-        if t is None:
-            return {"triples": 0, "summaries": 0, "evicted": 0}
-        return {"triples": len(t.triples), "summaries": len(t.summaries),
-                "evicted": len(t.evicted)}
+        with self._guard():
+            t = self.store.get(namespace)
+            if t is None:
+                return {"triples": 0, "summaries": 0, "evicted": 0}
+            return {"triples": len(t.triples),
+                    "summaries": len(t.summaries),
+                    "evicted": len(t.evicted)}
 
 
 class NamespaceView:
@@ -255,10 +386,14 @@ class NamespaceView:
                 "both record into the same namespace scope — use "
                 f"service.namespace({conversation_id!r}) for a separate "
                 "scope.", stacklevel=2)
-        if self.service.flush_every:
-            # async batched ingestion: buffer until flush_every sessions are
-            # pending (reads still see them — retrieve flushes first).  No
-            # extraction happens yet, so there is no per-session result.
+        runtime = self.service.runtime
+        if self.service.flush_every or (
+                runtime is not None
+                and runtime.policy.flush_interval_s is not None):
+            # async batched ingestion: buffer until the count-based or
+            # time-based flusher drains the queue (reads still see the
+            # buffered sessions — retrieve flushes first).  No extraction
+            # happens yet, so there is no per-session result.
             return self.service.enqueue(self.namespace, session_id, messages)
         return self.service.record(self.namespace, session_id, messages)
 
@@ -271,3 +406,9 @@ class NamespaceView:
 
     def stats(self) -> dict:
         return self.service.namespace_stats(self.namespace)
+
+    def close(self) -> None:
+        """Shut the backing service's lifecycle runtime down (final flush +
+        snapshot).  Idempotent and shared: the first closing view wins, so
+        any client of a shared service may call it on exit."""
+        self.service.close()

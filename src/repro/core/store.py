@@ -20,6 +20,16 @@ could not support:
   BM25 arrays, triples, summaries and namespace tables through
   `checkpoint/io.py`; `MemoryStore.restore(path, embedder)` reconstructs a
   store whose retrieval results are bit-identical to the writer's.
+* **incremental persistence hooks** — when `wal_sink` is attached (by
+  `core/lifecycle.py`'s LifecycleRuntime), every durable mutation emits a
+  self-describing record *before* it is applied: `flush` logs the extracted
+  sessions plus the raw embedding vectors (the only input a replay could
+  not recompute bit-exactly), `evict`/`evict_superseded`/`compact` log
+  their operation (they are deterministic functions of store state).
+  `apply_wal(record)` replays a record through the exact same commit code
+  the original mutation used, so snapshot + ordered replay reconstructs a
+  store that answers retrieval bit-identically up to the last durable
+  record.
 
 Layout invariant (checked, raising StoreInvariantError — not asserted):
 global row id == BM25 doc id == position in the row tables; tenant-local
@@ -29,7 +39,7 @@ away).  See docs/STORAGE.md for the full layout and remapping rules.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 import msgpack
 import numpy as np
@@ -89,6 +99,16 @@ class MemoryStore:
         # source of truth, mirrored into its device label buffer)
         self._row_tid: List[int] = []          # global row -> local tid
         self._pending: List[PendingSession] = []
+        # incremental-persistence hook: called with a self-describing record
+        # BEFORE each durable mutation is applied (WAL-before-apply); a sink
+        # that raises aborts the mutation.  Attached by LifecycleRuntime;
+        # must be None while apply_wal() replays (replay must not re-log).
+        self.wal_sink: Optional[Callable[[dict], object]] = None
+        # called with the session count AFTER each non-empty flush commits,
+        # whoever triggered it (runtime, service read path, direct caller);
+        # the runtime uses it to track flush times and wake blocked
+        # enqueuers waiting on queue space
+        self.on_flush_commit: Optional[Callable[[int], None]] = None
 
     # -- tenancy -----------------------------------------------------------
     def tenant(self, namespace: str) -> TenantState:
@@ -150,11 +170,13 @@ class MemoryStore:
         ONE bank append and ONE BM25 append.  Returns per-session
         (namespace, triples, summary) in enqueue order.
 
-        All-or-nothing: extraction and embedding (the phases running
-        caller-supplied code) touch no store state — if either raises, the
-        queue is restored intact and nothing is committed (no orphaned
-        summaries, no partial batch).  The commit phase only mutates the
-        store's own structures."""
+        All-or-nothing: extraction, embedding (the phases running
+        caller-supplied code) and the WAL append touch no store state — if
+        any of them raises, the queue is restored intact and nothing is
+        committed (no orphaned summaries, no partial batch, no WAL record
+        for an unapplied flush... and no applied flush without its WAL
+        record, since the sink runs first).  The commit phase only mutates
+        the store's own structures."""
         if not self._pending:
             return []
         pending, self._pending = self._pending, []
@@ -164,33 +186,99 @@ class MemoryStore:
                 triples, summary = self.extractor.extract(
                     p.conversation_id, p.session_id, p.messages)
                 batch.append((p, triples, summary))
-            flat = [(p, tr) for p, triples, _ in batch for tr in triples]
+            flat = [tr for _, triples, _ in batch for tr in triples]
             vecs = self.embedder.embed_texts(                # ONE embed call
-                [tr.text() for _, tr in flat]) if flat else None
+                [tr.text() for tr in flat]) if flat else None
+            sessions = [(p.namespace, summary, triples)
+                        for p, triples, summary in batch]
+            if self.wal_sink is not None:    # durability point: WAL first
+                self.wal_sink(self._flush_record(sessions, vecs))
         except BaseException:
             # restore the queue (ahead of anything enqueued concurrently)
             self._pending = pending + self._pending
             raise
-        # commit phase: only the store's own structures from here on
-        for p, triples, summary in batch:
-            self.tenant(p.namespace).summaries.add(summary)
-        if flat:
-            tenants = [self.tenant(p.namespace) for p, _ in flat]
-            rows = self.vindex.add(                          # ONE bank append
-                vecs, ns=[t.ns_id for t in tenants])
-            bids = self.bm25.add([tr.text() for _, tr in flat],
-                                 namespace=[t.ns_id for t in tenants])
-            for t, (_, tr), row, bid in zip(tenants, flat, rows, bids):
-                if not (int(row) == int(bid) == len(self._row_tid)):
-                    raise StoreInvariantError(
-                        f"write-path alignment drift: bank row {int(row)}, "
-                        f"BM25 doc {int(bid)}, row table size "
-                        f"{len(self._row_tid)} must all be equal")
-                tid = t.triples.add(tr)
-                t.rows.append(int(row))
-                self._row_tid.append(tid)
+        self._apply_flush(sessions, vecs)
+        if self.on_flush_commit is not None:
+            self.on_flush_commit(len(batch))
         return [(p.namespace, triples, summary)
                 for p, triples, summary in batch]
+
+    def _apply_flush(self, sessions, vecs) -> None:
+        """Commit one flush batch: `sessions` is [(namespace, Summary,
+        [Triple, ...]), ...] and `vecs` the (M, dim) f32 embeddings of the
+        flattened triples in order.  The ONLY code path that writes rows —
+        live flushes and WAL replay both land here, which is what makes
+        replayed state bit-identical to the original commit."""
+        for ns, summary, _ in sessions:
+            self.tenant(ns).summaries.add(summary)
+        flat = [(ns, tr) for ns, _, triples in sessions for tr in triples]
+        if not flat:
+            return
+        tenants = [self.tenant(ns) for ns, _ in flat]
+        rows = self.vindex.add(                              # ONE bank append
+            vecs, ns=[t.ns_id for t in tenants])
+        bids = self.bm25.add([tr.text() for _, tr in flat],
+                             namespace=[t.ns_id for t in tenants])
+        for t, (_, tr), row, bid in zip(tenants, flat, rows, bids):
+            if not (int(row) == int(bid) == len(self._row_tid)):
+                raise StoreInvariantError(
+                    f"write-path alignment drift: bank row {int(row)}, "
+                    f"BM25 doc {int(bid)}, row table size "
+                    f"{len(self._row_tid)} must all be equal")
+            tid = t.triples.add(tr)
+            t.rows.append(int(row))
+            self._row_tid.append(tid)
+
+    # -- incremental persistence (WAL records) ------------------------------
+    def _flush_record(self, sessions, vecs) -> dict:
+        """Self-describing WAL record of one flush batch.  Everything a
+        replay cannot recompute rides along: the extracted sessions (the
+        extractor may be an LLM) and the raw embedding vectors (the
+        embedder may be one too).  BM25 doc rows are NOT logged — they are
+        a deterministic function of triple text and the tokenizer."""
+        n_rows = sum(len(triples) for _, _, triples in sessions)
+        return {
+            "op": "flush",
+            "sessions": [{
+                "namespace": ns,
+                "summary": dataclasses.asdict(summary),
+                "triples": [dataclasses.asdict(tr) for tr in triples],
+            } for ns, summary, triples in sessions],
+            "n_rows": n_rows,
+            "dim": self.dim,
+            "vecs": (np.asarray(vecs, "<f4").tobytes()
+                     if n_rows else b""),
+        }
+
+    def apply_wal(self, record: dict) -> None:
+        """Replay one WAL record through the same commit code the live
+        mutation used.  Only valid on a store whose `wal_sink` is detached
+        (replay must not append to the log it is reading)."""
+        if self.wal_sink is not None:
+            raise StoreInvariantError(
+                "apply_wal with an attached wal_sink would re-log the "
+                "records being replayed")
+        op = record["op"]
+        if op == "flush":
+            sessions = [
+                (s["namespace"], Summary(**s["summary"]),
+                 [Triple(**td) for td in s["triples"]])
+                for s in record["sessions"]]
+            n, dim = int(record["n_rows"]), int(record["dim"])
+            if dim != self.dim:
+                raise StoreInvariantError(
+                    f"WAL flush record dim {dim} != store dim {self.dim}")
+            vecs = (np.frombuffer(record["vecs"], "<f4").reshape(n, dim)
+                    if n else None)
+            self._apply_flush(sessions, vecs)
+        elif op == "evict_ns":
+            self.evict_namespace(record["namespace"])
+        elif op == "evict_superseded":
+            self.evict_superseded(record["namespace"])
+        elif op == "compact":
+            self.compact()
+        else:
+            raise StoreInvariantError(f"unknown WAL record op {op!r}")
 
     def ingest(self, namespace: str, session_id: str,
                messages: Sequence[Message],
@@ -210,9 +298,11 @@ class MemoryStore:
         its stores.  Returns the number of rows evicted."""
         self._pending = [p for p in self._pending
                          if p.namespace != namespace]
-        t = self._tenants.pop(namespace, None)
-        if t is None:
+        if namespace not in self._tenants:
             return 0
+        if self.wal_sink is not None:    # deterministic given store state
+            self.wal_sink({"op": "evict_ns", "namespace": namespace})
+        t = self._tenants.pop(namespace)
         live = [row for tid, row in enumerate(t.rows)
                 if tid not in t.evicted and row >= 0]
         self.vindex.delete(live)
@@ -228,6 +318,8 @@ class MemoryStore:
             return 0
         fresh = [tid for tid in t.triples.superseded_ids()
                  if tid not in t.evicted]
+        if fresh and self.wal_sink is not None:
+            self.wal_sink({"op": "evict_superseded", "namespace": namespace})
         rows = [t.rows[tid] for tid in fresh]
         self.vindex.delete([r for r in rows if r >= 0])
         self.bm25.remove([r for r in rows if r >= 0])
@@ -242,6 +334,8 @@ class MemoryStore:
         -1).  Pending sessions are flushed first so the mapping is total.
         Retrieval results are unchanged (asserted in tests)."""
         self.flush()
+        if self.wal_sink is not None:    # deterministic given store state
+            self.wal_sink({"op": "compact"})
         before = self.vindex.n
         old_to_new = self.vindex.compact()
         bm_map = self.bm25.compact()
@@ -257,12 +351,14 @@ class MemoryStore:
                 "dropped": int(before - self.vindex.n)}
 
     # -- persistence -------------------------------------------------------
-    def snapshot(self, path: str) -> int:
+    def snapshot(self, path: str, *, atomic: bool = False,
+                 fsync: bool = False) -> int:
         """Serialize the full store state through checkpoint/io.py.
         Pending sessions are flushed first: a snapshot always captures a
-        consistent, fully-indexed state (crash consistency is
-        at-last-snapshot granularity — see docs/STORAGE.md).  Returns bytes
-        written."""
+        consistent, fully-indexed state.  `atomic`/`fsync` forward to
+        `io.save` — the lifecycle runtime's rotation uses both so a crash
+        mid-snapshot never clobbers the previous generation (see
+        docs/STORAGE.md and docs/OPERATIONS.md).  Returns bytes written."""
         self.flush()
         n = self.vindex.n
         meta = {
@@ -300,7 +396,7 @@ class MemoryStore:
             raise StoreInvariantError(
                 f"snapshot: row tables ({arrays['row_ns'].shape[0]}) out of "
                 f"sync with the bank ({n})")
-        return ckpt_io.save(path, arrays)
+        return ckpt_io.save(path, arrays, atomic=atomic, fsync=fsync)
 
     @classmethod
     def restore(cls, path: str, embedder,

@@ -35,6 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.common.utils import next_pow2 as _next_pow2
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 from repro.kernels import topk_mips as _tm
@@ -43,7 +44,10 @@ from repro.kernels import topk_mips as _tm
 # ---------------------------------------------------------------------------
 # Device-side primitives.  All donate their buffer arguments so XLA updates
 # the capacity-padded arrays in place (no realloc, no host round-trip); the
-# jit cache is keyed on (capacity, update width) only.
+# jit cache is keyed on (capacity, update width) only, and callers pad the
+# update width to a power of two (zero rows / -1 labels — exactly the
+# unfilled-slot representation), so a lifecycle flusher draining a different
+# number of sessions every interval still reuses a bounded executable set.
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, donate_argnums=(0, 1))
@@ -59,6 +63,18 @@ def _dev_delete(bank, labels, ids):
     """Tombstone rows in place: zero the vectors, set the labels to -1."""
     bank = bank.at[ids].set(0.0)
     labels = labels.at[ids].set(-1)
+    return bank, labels
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _dev_compact(bank, labels, gather, n_new):
+    """Repack live rows in place: new row r takes old row `gather[r]` for
+    r < n_new; the tail is zeroed / labeled -1.  Device-side compaction —
+    no host round-trip, and the buffers keep their capacity, so the search
+    executable (keyed on capacity) survives a compaction untouched."""
+    live = jnp.arange(bank.shape[0]) < n_new
+    bank = jnp.where(live[:, None], bank[gather], 0.0)
+    labels = jnp.where(live, labels[gather], -1)
     return bank, labels
 
 
@@ -82,13 +98,14 @@ def _search_device(bank, labels, queries, q_ns, n_valid, *, k: int,
 
 
 def _next_capacity(n: int, floor: int = 64) -> int:
-    return max(floor, 1 << max(0, int(n - 1).bit_length()))
+    return max(floor, _next_pow2(n))
 
 
 class VectorIndex:
     def __init__(self, dim: int, capacity: int = 1024, use_kernel: bool = True):
         self.dim = dim
         self.n = 0
+        self._n_dead = 0                 # O(1) tombstone counter
         self.use_kernel = use_kernel
         capacity = _next_capacity(capacity)
         # host mirror: source of truth for snapshot/compact and numpy readers
@@ -163,9 +180,21 @@ class VectorIndex:
         self._alive[self.n: self.n + m] = True
         self._ns[self.n: self.n + m] = ns_rows
         if self._bank_dev is not None:
+            # pad the update width to the next power of two (bounded by the
+            # remaining capacity) so variable-size flush batches reuse a
+            # bounded set of append executables; pad rows are written as
+            # zero vectors with -1 labels — the unfilled-slot representation
+            # those slots already hold
+            m_pad = max(m, min(_next_pow2(m), self.capacity - self.n))
+            vec_up, ns_up = vecs, ns_rows
+            if m_pad > m:
+                vec_up = np.zeros((m_pad, self.dim), np.float32)
+                vec_up[:m] = vecs
+                ns_up = np.full((m_pad,), -1, np.int32)
+                ns_up[:m] = ns_rows
             self._bank_dev, self._labels_dev = _dev_append(
-                self._bank_dev, self._labels_dev, jnp.asarray(vecs),
-                jnp.asarray(ns_rows), jnp.int32(self.n))
+                self._bank_dev, self._labels_dev, jnp.asarray(vec_up),
+                jnp.asarray(ns_up), jnp.int32(self.n))
         self.n += m
         return ids
 
@@ -175,11 +204,13 @@ class VectorIndex:
 
     @property
     def n_alive(self) -> int:
-        return int(self._alive[: self.n].sum())
+        return self.n - self._n_dead
 
     @property
     def n_dead(self) -> int:
-        return self.n - self.n_alive
+        """Tombstone count, O(1) — cheap enough for the lifecycle daemon to
+        poll every tick."""
+        return self._n_dead
 
     def alive(self, ids=None):
         """Liveness of `ids` (or the full (n,) mask when ids is None)."""
@@ -201,24 +232,36 @@ class VectorIndex:
         ids = ids[self._alive[ids]]
         self._alive[ids] = False
         self._bank[ids] = 0.0
+        self._n_dead += int(ids.size)
         if ids.size and self._bank_dev is not None:
+            # pad the id width to a power of two (duplicate scatter of the
+            # last id is idempotent) — bounded executable count under
+            # variable-size evictions
+            pad = _next_pow2(int(ids.size))
+            ids_up = ids if pad == ids.size else np.concatenate(
+                [ids, np.full((pad - ids.size,), ids[-1], np.int64)])
             self._bank_dev, self._labels_dev = _dev_delete(
-                self._bank_dev, self._labels_dev, jnp.asarray(ids))
+                self._bank_dev, self._labels_dev, jnp.asarray(ids_up))
         return int(ids.size)
 
     def compact(self) -> np.ndarray:
-        """Physically drop tombstoned rows, repacking the bank (and shrinking
-        its capacity to the next power of two).  Returns the old→new row id
-        mapping as an (n_old,) int64 array (-1 for dropped rows); kept rows
-        keep their relative order.  Callers owning row-aligned side tables
-        (see core/store.py) must remap them with the returned array."""
+        """Physically drop tombstoned rows, repacking the bank.  Returns the
+        old→new row id mapping as an (n_old,) int64 array (-1 for dropped
+        rows); kept rows keep their relative order.  Callers owning
+        row-aligned side tables (see core/store.py) must remap them with the
+        returned array.
+
+        Capacity is sticky: the buffers are NOT shrunk, and the device
+        copies are repacked in place by a donated gather (`_dev_compact`) —
+        a compaction moves zero bank bytes host->device and leaves the
+        search executable (keyed on capacity) untouched."""
         n_old = self.n
         alive = self._alive[:n_old]
         old_to_new = np.full((n_old,), -1, np.int64)
         keep = np.where(alive)[0]
         old_to_new[keep] = np.arange(keep.size)
         n_new = int(keep.size)
-        cap = _next_capacity(n_new)
+        cap = self.capacity
         bank = np.zeros((cap, self.dim), np.float32)
         bank[:n_new] = self._bank[keep]
         labels = np.zeros((cap,), np.int32)
@@ -227,7 +270,13 @@ class VectorIndex:
         self._alive = np.ones((cap,), bool)
         self._ns = labels
         self.n = n_new
-        self._invalidate_device()
+        self._n_dead = 0
+        if self._bank_dev is not None:
+            gather = np.zeros((cap,), np.int32)
+            gather[:n_new] = keep
+            self._bank_dev, self._labels_dev = _dev_compact(
+                self._bank_dev, self._labels_dev, jnp.asarray(gather),
+                jnp.int32(n_new))
         return old_to_new
 
     def load_rows(self, bank, alive, ns=None) -> None:
@@ -246,6 +295,7 @@ class VectorIndex:
         if ns is not None:
             self._ns[:n] = np.asarray(ns, np.int32)
         self.n = n
+        self._n_dead = n - int(self._alive[:n].sum())
         self._invalidate_device()
 
     # -- reads ---------------------------------------------------------------

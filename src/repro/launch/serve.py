@@ -4,16 +4,22 @@ the Memori memory layer in front.
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b [--multipod]
     PYTHONPATH=src python -m repro.launch.serve --host-demo
     PYTHONPATH=src python -m repro.launch.serve --host-demo \
-        --snapshot-path /tmp/memori.snap --flush-interval 8
+        --snapshot-path /tmp/memori.d --flush-interval 0.5 \
+        --snapshot-interval 30 --max-pending 256
 
-`--snapshot-path` makes the memory layer durable: the service restores from
-the snapshot on boot (a restarted server answers identically to the one
-that wrote it) and writes a fresh snapshot on shutdown.  `--flush-interval`
-switches ingestion to the async batched path: sessions are enqueued and
-flushed through one embed call per N pending sessions.
+`--snapshot-path` mounts the memory layer on a lifecycle runtime rooted at
+that durable directory: the service recovers from it on boot (newest valid
+snapshot + WAL replay — a restarted server answers bit-identically up to
+the last durable flush) and every flush appends to the write-ahead log.
+`--flush-interval` runs the background flusher (seconds); `--max-pending`
+bounds the queue with blocking backpressure; `--snapshot-interval` rotates
+full snapshots (retaining `--snapshot-retain` generations and truncating
+the WAL).  SIGTERM/SIGINT trigger a final flush + snapshot before exit, so
+a container shutdown loses nothing that reached the queue drain.
 """
 import argparse
 import os
+import signal
 
 
 def main():
@@ -23,13 +29,23 @@ def main():
     ap.add_argument("--host-demo", action="store_true")
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--snapshot-path", default=None,
-                    help="restore the memory store from this snapshot on "
-                         "boot (if it exists) and write it back on shutdown")
-    ap.add_argument("--flush-interval", type=int, default=None,
-                    help="auto-flush pending sessions once this many are "
-                         "queued (async batched ingestion); default: "
-                         "synchronous record")
+                    help="durable directory for the lifecycle runtime "
+                         "(rotating snapshots + WAL); recovered on boot, "
+                         "snapshotted on shutdown incl. SIGTERM/SIGINT")
+    ap.add_argument("--flush-interval", type=float, default=None,
+                    help="background flusher period in seconds "
+                         "(policy.flush_interval_s); default: synchronous "
+                         "record")
+    ap.add_argument("--max-pending", type=int, default=None,
+                    help="bound the pending queue (blocking backpressure)")
+    ap.add_argument("--snapshot-interval", type=float, default=None,
+                    help="periodic full-snapshot rotation period in seconds")
+    ap.add_argument("--snapshot-retain", type=int, default=2,
+                    help="snapshot generations kept by rotation")
     args = ap.parse_args()
+    if args.snapshot_interval is not None and args.snapshot_path is None:
+        ap.error("--snapshot-interval needs --snapshot-path (rotation "
+                 "without a durable directory would silently no-op)")
 
     if args.host_demo:
         os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=4 "
@@ -38,7 +54,7 @@ def main():
     import jax
 
     from repro.configs import get_config
-    from repro.core import MemoriClient, MemoryService
+    from repro.core import LifecyclePolicy, MemoriClient, MemoryService
     from repro.core.embedder import HashEmbedder
     from repro.data.tokenizer import HashTokenizer
     from repro.models.model_api import Model
@@ -54,29 +70,65 @@ def main():
     engine = Engine(model, params, max_len=args.max_len, slots=2,
                     sampler=SamplerConfig(temperature=0.8, top_k=40),
                     tokenizer=tok)
+    policy = LifecyclePolicy(
+        flush_interval_s=args.flush_interval,
+        max_pending=args.max_pending,
+        snapshot_interval_s=args.snapshot_interval,
+        snapshot_retain=args.snapshot_retain,
+    )
+    wants_runtime = args.snapshot_path is not None or policy.wants_daemon \
+        or args.max_pending is not None
     # one multi-tenant service fronts every conversation on this host;
     # with --snapshot-path it picks up exactly where the last run stopped
-    if args.snapshot_path and os.path.exists(args.snapshot_path):
-        service = MemoryService.restore(
-            args.snapshot_path, HashEmbedder(), use_kernel=False,
-            budget=800, flush_every=args.flush_interval)
-        print(f"restored memory store from {args.snapshot_path}: "
+    if args.snapshot_path is not None:
+        if os.path.isfile(args.snapshot_path):
+            raise SystemExit(
+                f"--snapshot-path {args.snapshot_path} is a legacy "
+                "single-file snapshot; the lifecycle runtime needs a "
+                "directory (restore the file once via "
+                "MemoryService.restore, then serve with a directory)")
+        service = MemoryService.recover(
+            args.snapshot_path, HashEmbedder(), policy=policy,
+            use_kernel=False, budget=800)
+        print(f"recovered memory store from {args.snapshot_path}: "
               f"{service.stats()}")
     else:
         service = MemoryService(HashEmbedder(), budget=800, use_kernel=False,
-                                flush_every=args.flush_interval)
+                                policy=policy if wants_runtime else None)
+
+    def _shutdown(signum, frame):
+        # container shutdown: unwind via SystemExit (flush's all-or-nothing
+        # guard restores the queue if we land mid-batch) and let the
+        # `finally` below run the single close path — the handler itself
+        # must NOT flush/rotate, it may be interrupting a commit
+        print(f"signal {signum}: shutting down")
+        raise SystemExit(0)
+
+    signal.signal(signal.SIGTERM, _shutdown)
+    signal.signal(signal.SIGINT, _shutdown)
+
     llm = lambda p: engine.generate([p[-500:]], max_new_tokens=12)[0]  # noqa: E731
     client = MemoriClient(llm, service.namespace("u0/demo"))
 
-    print(client.chat("I work as a translator and I live in Cusco."))
-    client.end_session()
-    [ctx] = service.retrieve_batch([("u0/demo", "Where does the user live?")])
-    print(f"retrieved {len(ctx.triples)} triples, {ctx.token_count} tokens")
-    print("service:", service.stats())
-    print("engine:", engine.stats)
-    if args.snapshot_path:
-        n = service.snapshot(args.snapshot_path)
-        print(f"snapshot: wrote {n} bytes -> {args.snapshot_path}")
+    try:
+        print(client.chat("I work as a translator and I live in Cusco."))
+        client.end_session()
+        [ctx] = service.retrieve_batch(
+            [("u0/demo", "Where does the user live?")])
+        print(f"retrieved {len(ctx.triples)} triples, "
+              f"{ctx.token_count} tokens")
+        print("service:", service.stats())
+        print("engine:", engine.stats)
+    finally:
+        try:
+            service.close(final_snapshot=args.snapshot_path is not None)
+            if args.snapshot_path is not None:
+                print(f"final snapshot rotation -> {args.snapshot_path}")
+        except Exception as e:
+            # the WAL already holds every durable flush; recovery replays
+            # it even when the final rotation could not be written
+            print(f"clean close failed ({e!r}); durable WAL state in "
+                  f"{args.snapshot_path} remains recoverable")
 
 
 if __name__ == "__main__":

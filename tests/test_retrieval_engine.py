@@ -215,6 +215,47 @@ def _session(texts, speaker="u"):
     return [Message(speaker, t, 1700000000.0) for t in texts]
 
 
+def test_ragged_batch_sizes_bucket_to_bounded_executables():
+    """Q-shape bucketing: after warming the power-of-two buckets, ragged
+    public-facing batch sizes reuse them — zero new executables for any
+    B <= the largest warmed bucket, across the whole read path (masked
+    top-k, stacked BM25, on-device RRF)."""
+    svc = MemoryService(HashEmbedder(), use_kernel=False, budget=800)
+    for u in range(4):
+        svc.record(f"u{u}/c0", "s0", _session(
+            [f"I live in City{u}.", f"I adopted a pet named P{u}."]))
+    q = "Which city does the user live in?"
+
+    def batch(n):
+        return [(f"u{i % 4}/c0", q) for i in range(n)]
+
+    for n in (1, 2, 4, 8):                       # warm each pow2 bucket
+        svc.retrieve_batch(batch(n))
+    with count_compiles() as cc:
+        for n in (3, 5, 6, 7, 1, 2, 4, 8, 5, 3, 6):
+            got = svc.retrieve_batch(batch(n))
+            assert len(got) == n
+    assert cc.count == 0, \
+        f"ragged batch sizes minted executables: {cc.msgs[:5]}"
+
+
+def test_padded_batch_equals_unpadded_results():
+    """Bucket padding is invisible: every ragged batch answers exactly like
+    per-request retrieves (the padded queries match nothing)."""
+    svc = MemoryService(HashEmbedder(), use_kernel=False, budget=800)
+    for u in range(3):
+        svc.record(f"u{u}/c0", "s0", _session(
+            [f"I live in City{u}.", f"I work as a welder."]))
+    reqs = [(f"u{i % 3}/c0", t) for i, t in enumerate(
+        ["Which city does the user live in?", "What is the user's job?",
+         "Which city does the user live in?", "anything?",
+         "What is the user's job?"])]            # B=5 -> pads to 8
+    batched = svc.retrieve_batch(reqs)
+    for got, (ns, q) in zip(batched, reqs):
+        want = svc.retrieve(ns, q)
+        assert got.text == want.text
+
+
 def test_service_batched_equals_sequential_under_interleaved_ops(tmp_path):
     """retrieve_batch == per-request retrieves (different jit shapes, same
     engine) after every kind of store mutation: record, evict_superseded,
