@@ -15,9 +15,12 @@ SDK clients' `close()`) writes the final snapshot generation — restart the
 process with the same directory and it recovers where it left off.  The LM
 is random-init (this box trains ~minutes, not the hours a useful chat
 model needs) — the demo shows the *system*: interception, retrieval,
-isolation, token accounting, batched decode, durability.
+isolation, token accounting, batched decode, durability — and, at the end,
+the MemoryScheduler fusing independent concurrent clients' single retrieves into
+one batched device launch per tick (continuous batching for memory ops).
 """
 import tempfile
+import threading
 import time
 
 import jax
@@ -81,8 +84,29 @@ def main():
         print(f"\n[{ns}] Q: {q}  ({ctx.token_count} tokens injected)")
         for t in ctx.triples[:3]:
             print(f"   {t.render()}")
-    print(f"\nengine stats: {engine.stats}")
-    service.close()          # final flush + snapshot generation
+
+    # cross-CLIENT batching: mount the MemoryScheduler and let independent
+    # threads (each a client issuing ONE retrieve at a time, the real
+    # deployment shape) coalesce into one device launch per tick — no
+    # caller hand-assembles a batch
+    service.start_scheduler(tick_interval_s=0.01, max_batch=16)
+    answers = {}
+
+    def client(ns, q):
+        # service.retrieve routes through the scheduler automatically
+        answers[ns] = service.retrieve(ns, q)
+
+    threads = [threading.Thread(target=client, args=(ns, q))
+               for ns, q in batch]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    st = service.scheduler.stats()
+    print(f"\nscheduler: {st['retrieves']} concurrent single retrieves in "
+          f"{st['retrieve_launches']} batched launch(es)")
+    print(f"engine stats: {engine.stats}")
+    service.close()          # scheduler drain + final flush + snapshot
     print(f"memory durable in {data_dir} "
           f"(MemoryService.recover picks it up)")
 

@@ -34,4 +34,12 @@ if [[ "${FAST_ONLY:-0}" != "1" ]]; then
         --seconds 5 --json BENCH_lifecycle.json
     echo "== BENCH_lifecycle.json =="
     cat BENCH_lifecycle.json
+
+    echo "== bench: cross-client scheduler (closed-loop multi-client) =="
+    # asserts the scheduled path >= 2x the per-call path at 8 clients
+    JAX_PLATFORMS=cpu python benchmarks/scheduler_bench.py \
+        --clients 1,8 --seconds 2 --assert-speedup 2.0 \
+        --json BENCH_scheduler.json
+    echo "== BENCH_scheduler.json =="
+    cat BENCH_scheduler.json
 fi

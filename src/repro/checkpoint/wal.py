@@ -75,10 +75,17 @@ class WriteAheadLog:
         os.makedirs(self.dir, exist_ok=True)
         # seq numbering continues past everything ever named on disk —
         # including snapshots' coverage, so a post-recovery append can never
-        # collide with a truncated-away segment's seq
-        tail = max(self.segment_seqs(), default=0)
+        # collide with a truncated-away segment's seq.  A group segment is
+        # named by its FIRST seq but owns a run of them, so the tail comes
+        # from the newest segment's record count (a bounded header peek —
+        # the payload is never loaded at open time).
+        segs = self.segment_seqs()
+        tail = segs[-1] + self.segment_record_count(segs[-1]) - 1 \
+            if segs else 0
         snaps = max((s for s, _ in self.snapshots()), default=0)
         self._next_seq = max(tail, snaps) + 1
+        # file seq replay last stopped at (None = clean); see quarantine_from
+        self.replay_stopped_seq: Optional[int] = None
 
     # -- paths -------------------------------------------------------------
     def _seg_path(self, seq: int) -> str:
@@ -133,9 +140,93 @@ class WriteAheadLog:
         self._next_seq = seq + 1
         return seq
 
+    def append_group(self, records: List[dict]) -> Tuple[int, int]:
+        """Group commit: durably append several records as ONE segment file
+        (one atomic write, one fsync).  The file is named by the first seq
+        and owns `len(records)` consecutive seqs; its CRC covers the whole
+        group, so a torn / corrupt group replays all-or-nothing — recovery
+        can never apply a prefix of a group.  Returns (first_seq, last_seq).
+
+        This is what coalesces a multi-writer scheduler tick (batched
+        flush + evictions + compaction) into a single fsync instead of one
+        per mutation (see LifecycleRuntime.group_commit for the commit
+        ordering contract)."""
+        records = list(records)
+        if not records:
+            raise ValueError("append_group needs at least one record")
+        if len(records) == 1:
+            seq = self.append(records[0])
+            return seq, seq
+        first = self._next_seq
+        payload = msgpack.packb(records, use_bin_type=True)
+        envelope = msgpack.packb({
+            "version": SEGMENT_VERSION,
+            "seq": first,
+            "count": len(records),
+            "crc": zlib.crc32(payload),
+            "payload": payload,
+        }, use_bin_type=True)
+        atomic_write_bytes(self._seg_path(first), envelope)
+        self._next_seq = first + len(records)
+        return first, first + len(records) - 1
+
     # -- read / replay -----------------------------------------------------
-    def read_segment(self, seq: int) -> dict:
-        """Decode + validate one segment; raises CorruptSegmentError."""
+    def segment_record_count(self, seq: int) -> int:
+        """Record count of one segment from its envelope header alone — a
+        bounded read that never loads the payload (flush payloads carry raw
+        embedding vectors and can be large).  The envelope packs its keys
+        in order (version, seq, [count], crc, payload), so the count, when
+        present, always precedes the payload bytes.  Undecodable headers
+        count as 1: replay stops at that file regardless."""
+        try:
+            with open(self._seg_path(seq), "rb") as f:
+                head = f.read(96)
+            u = msgpack.Unpacker(raw=False)
+            u.feed(head)
+            for _ in range(u.read_map_header()):
+                key = u.unpack()
+                if key == "payload":
+                    break
+                val = u.unpack()
+                if key == "count":
+                    return int(val)
+            return 1
+        except Exception:
+            return 1
+
+    def quarantine_from(self, file_seq: int) -> List[str]:
+        """Set aside every segment file with name seq >= `file_seq`
+        (renamed to `*.corrupt`, invisible to scans but preserved for
+        forensics).  Called by recovery when replay stops inside the log:
+        the un-replayable tail must not keep shadowing the seq space —
+        otherwise records appended AFTER the remount would sit behind the
+        corrupt file forever and every future recovery would silently drop
+        them despite their acknowledged-durable fsync."""
+        moved = []
+        for seq in self.segment_seqs():
+            if seq >= file_seq:
+                path = self._seg_path(seq)
+                os.replace(path, path + ".corrupt")
+                moved.append(os.path.basename(path) + ".corrupt")
+        if moved:
+            fsync_dir(self.dir)
+            warnings.warn(f"WAL quarantined un-replayable tail: {moved}",
+                          stacklevel=2)
+        return moved
+
+    def file_seq_of(self, record_seq: int) -> int:
+        """The name seq of the segment file holding `record_seq` (group
+        files own a run of record seqs past their name)."""
+        owner = 0
+        for seq in self.segment_seqs():
+            if seq <= record_seq:
+                owner = seq
+        return owner
+
+    def _read_env(self, seq: int):
+        """Decode + validate one segment file's envelope; returns
+        (count, decoded payload) — a dict for single-record segments, a
+        list for groups.  Raises CorruptSegmentError."""
         with open(self._seg_path(seq), "rb") as f:
             raw = f.read()
         try:
@@ -152,23 +243,67 @@ class WriteAheadLog:
                 f"segment file {seq} claims seq {env.get('seq')}")
         if zlib.crc32(payload) != crc:
             raise CorruptSegmentError(f"segment {seq}: checksum mismatch")
-        return msgpack.unpackb(payload, raw=False)
+        count = int(env.get("count", 1))
+        decoded = msgpack.unpackb(payload, raw=False)
+        if count > 1 and (not isinstance(decoded, list)
+                          or len(decoded) != count):
+            raise CorruptSegmentError(
+                f"segment {seq}: group claims {count} records, payload "
+                f"holds {len(decoded) if isinstance(decoded, list) else 1}")
+        return count, decoded
+
+    def read_segment(self, seq: int) -> dict:
+        """Decode + validate one single-record segment; raises
+        CorruptSegmentError (group segments read via read_records)."""
+        count, decoded = self._read_env(seq)
+        if count > 1:
+            raise CorruptSegmentError(
+                f"segment {seq} is a {count}-record group; use "
+                "read_records()")
+        return decoded
+
+    def read_records(self, seq: int) -> List[dict]:
+        """Decode + validate one segment file into its record list (length
+        1 for classic segments)."""
+        count, decoded = self._read_env(seq)
+        return decoded if count > 1 else [decoded]
 
     def replay_records(self, after_seq: int = 0
                        ) -> Iterator[Tuple[int, dict]]:
-        """Yield (seq, record) in order for every valid segment with
-        seq > after_seq.  Replay stops at the first invalid segment (with a
-        warning): everything after an undecodable record has unknown
-        provenance and must not be applied."""
-        for seq in self.segment_seqs():
+        """Yield (seq, record) in order for every valid record with
+        seq > after_seq — group segments expand to their consecutive seq
+        run.  Replay stops at the first invalid segment (with a warning):
+        everything after an undecodable record has unknown provenance and
+        must not be applied.  Where replay stopped is left in
+        `replay_stopped_seq` (the FILE's name seq) so recovery can
+        quarantine the dead tail before accepting new appends."""
+        self.replay_stopped_seq = None
+        segs = self.segment_seqs()
+        for i, seq in enumerate(segs):
             if seq <= after_seq:
-                continue
+                # records are consecutive across segment files, so this
+                # file ends at segs[i+1] - 1: when that is still <= the
+                # coverage, skip by name alone — no read, no checksum (only
+                # the last covered file, whose extent the name alone can't
+                # bound, needs decoding to find a straddling group tail)
+                nxt = segs[i + 1] if i + 1 < len(segs) else None
+                if nxt is not None and nxt <= after_seq + 1:
+                    continue
             try:
-                rec = self.read_segment(seq)
+                records = self.read_records(seq)
             except CorruptSegmentError as e:
+                # fully-covered corrupt files were already skipped by name
+                # above; reaching here means this file's extent cannot be
+                # bounded without decoding it — it may be a group whose
+                # tail straddles past the coverage, so nothing after it
+                # may be applied
+                self.replay_stopped_seq = seq
                 warnings.warn(f"WAL replay stopped: {e}", stacklevel=2)
                 return
-            yield seq, rec
+            for j, rec in enumerate(records):
+                if seq + j <= after_seq:
+                    continue
+                yield seq + j, rec
 
     # -- rotation ----------------------------------------------------------
     def commit_snapshot(self, wal_through: int, retain: int = 2) -> dict:

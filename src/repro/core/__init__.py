@@ -1,11 +1,15 @@
 # The paper's primary contribution: the Memori persistent memory layer —
 # Advanced Augmentation (triples + summaries), hybrid retrieval over the
 # sharded vector index + hashed BM25, token budgeting, and the SDK wrapper.
+from repro.core.api import (CompactRequest, EvictRequest,  # noqa: F401
+                            MemoryRequest, MemoryResponse, RawRetrieval,
+                            RecordRequest, RetrievalPlan, RetrieveRequest)
 from repro.core.augmentation import AdvancedAugmentation  # noqa: F401
 from repro.core.extraction import LMExtractor, Message, RuleExtractor  # noqa: F401
 from repro.core.lifecycle import (BackpressureError, LifecyclePolicy,  # noqa: F401
                                   LifecycleRuntime)
 from repro.core.memory import ANSWER_PROMPT, MemoriMemory, RetrievedContext  # noqa: F401
+from repro.core.scheduler import MemoryScheduler  # noqa: F401
 from repro.core.sdk import MemoriClient  # noqa: F401
 from repro.core.service import MemoryService, NamespaceView  # noqa: F401
 from repro.core.store import (MemoryStore, StoreInvariantError,  # noqa: F401

@@ -1,0 +1,217 @@
+"""Typed request API for the memory service — the public frontend surface.
+
+The paper's economics come from batching every tenant through one embed
+call and one masked kernel launch, but a positional
+`retrieve_batch([(ns, q), ...])` only delivers that when a single caller
+hand-assembles the batch.  Production deployments are many independent
+clients issuing one operation at a time, each with its own options — so the
+public surface is *requests*, not method arguments:
+
+* `RetrieveRequest` / `RecordRequest` / `EvictRequest` / `CompactRequest`
+  are immutable, validated descriptions of one operation, carrying every
+  per-request option (`top_k`, dense/sparse `weights`, plan `stages`).
+* `MemoryResponse` is the uniform envelope every operation resolves to:
+  payload, status, error, queue/service timing, token counts, and the size
+  of the device batch the request shared.
+* `RetrievalPlan` names the stage pipeline a retrieve runs —
+  embed → dense → sparse → fuse → budget — with variants that drop stages
+  (`dense_only`, `sparse_only`, `raw` = no token budgeting, fused ids out).
+
+Requests are what `core/scheduler.py`'s MemoryScheduler collects from many
+threads and fuses into one device launch per tick; `MemoryService.execute`
+is the engine that runs a homogeneous batch of RetrieveRequests through one
+embed + one masked top-k + one stacked BM25 + one fused RRF launch,
+honoring per-request options by fusing at max(top_k) on device and slicing
+per request.  The legacy tuple/kwargs surface remains as thin wrappers that
+build requests (see docs/API.md for the migration map).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Sequence, Tuple, Union
+
+from repro.core.extraction import Message
+
+STAGE_DENSE = "dense"
+STAGE_SPARSE = "sparse"
+STAGE_FUSE = "fuse"
+STAGE_BUDGET = "budget"
+KNOWN_STAGES = (STAGE_DENSE, STAGE_SPARSE, STAGE_FUSE, STAGE_BUDGET)
+
+
+def _check_stages(stages: Sequence[str]) -> Tuple[str, ...]:
+    stages = tuple(dict.fromkeys(stages))
+    unknown = [s for s in stages if s not in KNOWN_STAGES]
+    if unknown:
+        raise ValueError(f"unknown retrieval stages {unknown}; "
+                         f"known: {KNOWN_STAGES}")
+    if STAGE_DENSE not in stages and STAGE_SPARSE not in stages:
+        raise ValueError("a retrieval plan needs at least one of "
+                         "'dense' / 'sparse'")
+    # fuse is how rankings become one result — it is always implied, even
+    # for a single ranking (the B=1-ranking fuse is what keeps dense-only
+    # ordering identical to hybrid ordering restricted to dense hits)
+    if STAGE_FUSE not in stages:
+        stages = stages + (STAGE_FUSE,)
+    return stages
+
+
+@dataclasses.dataclass(frozen=True)
+class RetrievalPlan:
+    """The stage pipeline a retrieve runs, plus its default knobs.
+
+    `stages` ⊆ {dense, sparse, fuse, budget}; at least one of dense/sparse;
+    fuse is implied.  Dropping `budget` returns a `RawRetrieval` (fused
+    global row ids + scores, no token budgeting, no rendering) instead of a
+    `RetrievedContext`.  Every knob here is a *default*: a RetrieveRequest
+    may override any of them per request, and mixed-option requests still
+    share one device launch."""
+    stages: Tuple[str, ...] = KNOWN_STAGES
+    top_k: Optional[int] = None
+    dense_weight: Optional[float] = None
+    sparse_weight: Optional[float] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "stages", _check_stages(self.stages))
+        if self.top_k is not None and self.top_k < 1:
+            raise ValueError("top_k must be >= 1")
+
+    # -- variants ----------------------------------------------------------
+    @classmethod
+    def hybrid(cls, **kw) -> "RetrievalPlan":
+        return cls(**kw)
+
+    @classmethod
+    def dense_only(cls, budget: bool = True, **kw) -> "RetrievalPlan":
+        st = (STAGE_DENSE, STAGE_FUSE) + ((STAGE_BUDGET,) if budget else ())
+        return cls(stages=st, **kw)
+
+    @classmethod
+    def sparse_only(cls, budget: bool = True, **kw) -> "RetrievalPlan":
+        st = (STAGE_SPARSE, STAGE_FUSE) + ((STAGE_BUDGET,) if budget else ())
+        return cls(stages=st, **kw)
+
+    @classmethod
+    def raw(cls, **kw) -> "RetrievalPlan":
+        """Hybrid retrieval, fused ids out: no budgeting, no rendering."""
+        return cls(stages=(STAGE_DENSE, STAGE_SPARSE, STAGE_FUSE), **kw)
+
+    @property
+    def wants_dense(self) -> bool:
+        return STAGE_DENSE in self.stages
+
+    @property
+    def wants_sparse(self) -> bool:
+        return STAGE_SPARSE in self.stages
+
+    @property
+    def wants_budget(self) -> bool:
+        return STAGE_BUDGET in self.stages
+
+
+@dataclasses.dataclass(frozen=True)
+class RetrieveRequest:
+    """One tenant's retrieval with its own options.  `None` options fall
+    back to the plan's defaults, then the service's."""
+    namespace: str
+    query: str
+    top_k: Optional[int] = None
+    dense_weight: Optional[float] = None
+    sparse_weight: Optional[float] = None
+    stages: Optional[Tuple[str, ...]] = None
+
+    def __post_init__(self):
+        if not isinstance(self.namespace, str):
+            raise TypeError(f"namespace must be str, got "
+                            f"{type(self.namespace).__name__}")
+        if not isinstance(self.query, str):
+            raise TypeError(f"query must be str, got "
+                            f"{type(self.query).__name__}")
+        if self.top_k is not None and self.top_k < 1:
+            raise ValueError("top_k must be >= 1")
+        if self.stages is not None:
+            object.__setattr__(self, "stages", _check_stages(self.stages))
+
+
+@dataclasses.dataclass(frozen=True)
+class RecordRequest:
+    """Async ingest of one session.  Resolves once the session is accepted
+    into the (backpressured) write queue — and, when the scheduler flushes
+    per tick, once the tick's batched flush has committed and its WAL
+    record is durable."""
+    namespace: str
+    session_id: str
+    messages: Tuple[Message, ...]
+    conversation_id: Optional[str] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "messages", tuple(self.messages))
+        if not self.messages:
+            raise ValueError("RecordRequest needs at least one message")
+
+
+@dataclasses.dataclass(frozen=True)
+class EvictRequest:
+    """Evict a whole namespace, or (superseded_only) just the triples
+    superseded under conflict resolution."""
+    namespace: str
+    superseded_only: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class CompactRequest:
+    """Reclaim tombstoned rows across the whole store."""
+
+
+MemoryRequest = Union[RetrieveRequest, RecordRequest, EvictRequest,
+                      CompactRequest]
+
+
+@dataclasses.dataclass
+class RawRetrieval:
+    """The no-budget payload: the fused ranking itself.  `row_ids` are
+    global bank rows (valid until the next compaction remaps them),
+    `triple_ids` the tenant-local triple ids behind them."""
+    row_ids: List[int]
+    triple_ids: List[int]
+    scores: List[float]
+
+
+@dataclasses.dataclass
+class MemoryResponse:
+    """The uniform envelope every submitted request resolves to."""
+    payload: Any                      # RetrievedContext | RawRetrieval |
+    #                                   int (evict) | dict (record/compact)
+    op: str = ""                      # retrieve | record | evict | compact
+    status: str = "ok"                # "ok" | "error"
+    error: Optional[str] = None
+    exception: Optional[BaseException] = None   # in-process detail
+    queued_s: float = 0.0             # submit -> tick pickup
+    service_s: float = 0.0            # execution time inside the tick
+    batch_size: int = 1               # requests sharing the device launch
+    token_count: Optional[int] = None  # retrieves with a budget stage
+
+    @property
+    def ok(self) -> bool:
+        return self.status == "ok"
+
+    def result(self) -> Any:
+        """Payload, or re-raise the request's failure."""
+        if self.status != "ok":
+            if self.exception is not None:
+                raise self.exception
+            raise RuntimeError(self.error or "memory request failed")
+        return self.payload
+
+
+def as_retrieve_request(req, top_k: Optional[int] = None) -> RetrieveRequest:
+    """Coerce the legacy positional shape — an (namespace, query) tuple —
+    into a RetrieveRequest.  A batch-global `top_k` kwarg becomes the
+    per-request default (an explicit per-request top_k wins: that is the
+    fix for the old silently-shared batch-global k)."""
+    if isinstance(req, RetrieveRequest):
+        if top_k is not None and req.top_k is None:
+            return dataclasses.replace(req, top_k=top_k)
+        return req
+    ns, q = req
+    return RetrieveRequest(namespace=ns, query=q, top_k=top_k)

@@ -50,6 +50,19 @@ def _dev_append(docs, lens, new_docs, new_lens, start):
     return docs, lens
 
 
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _dev_compact(docs, lens, gather, n_new):
+    """Repack live doc rows in place: new row r takes old row `gather[r]`
+    for r < n_new; the tail resets to the -1/1.0 unfilled defaults.  The
+    sparse mirror of VectorIndex._dev_compact — a compaction moves zero
+    doc-block bytes host->device and keeps the capacity (and with it every
+    scoring executable keyed on it)."""
+    live = jnp.arange(docs.shape[0]) < n_new
+    docs = jnp.where(live[:, None], docs[gather], -1)
+    lens = jnp.where(live, lens[gather], 1.0)
+    return docs, lens
+
+
 class BM25Index:
     def __init__(self, k1: float = 1.5, b: float = 0.75, max_doc_len: int = 32,
                  tokenizer: HashTokenizer | None = None, capacity: int = 256):
@@ -162,7 +175,17 @@ class BM25Index:
         self._docs, self._lens, self._ns, self._alive = \
             docs, lens, ns, alive_new
         self.n = n_new
-        self._invalidate_device()
+        if self._docs_dev is not None:
+            # device-side repack: donated gather in place, capacity sticky —
+            # no (capacity, L) doc-block re-upload, the scoring executables
+            # (keyed on capacity) survive the compaction untouched
+            gather = np.zeros((cap,), np.int32)
+            gather[:n_new] = keep
+            self._docs_dev, self._lens_dev = _dev_compact(
+                self._docs_dev, self._lens_dev, jnp.asarray(gather),
+                jnp.int32(n_new))
+        else:
+            self._invalidate_device()
         return old_to_new
 
     # -- snapshot surface (see core/store.py) ------------------------------

@@ -53,7 +53,10 @@ def rrf_fuse(rankings: Sequence[Sequence[int]], weights: Sequence[float] = None,
 def _rrf_fuse_device(ids, pos, ranking_id, weights, *, k: int, c: float):
     """ids (B, P) i32 concatenated rankings (-1 padding); pos (P,) i32 rank
     within the owning ranking; ranking_id (P,) i32 column -> ranking;
-    weights (R,) f32.  Returns (fused_ids (B, k) i32, scores (B, k) f32)."""
+    weights (B, R) f32 per-row ranking weights (every request in the batch
+    may weight dense vs sparse differently — the typed-request API's
+    per-request `weights` option rides in here).  Returns
+    (fused_ids (B, k) i32, scores (B, k) f32)."""
     B, P = ids.shape
     valid = ids >= 0                                            # (B, P)
     eq = ids[:, :, None] == ids[:, None, :]                     # (B, P, P)
@@ -64,7 +67,7 @@ def _rrf_fuse_device(ids, pos, ranking_id, weights, *, k: int, c: float):
     dup = jnp.any(eq & (earlier & same_ranking)[None, :, :], axis=2)
     contrib = jnp.where(
         valid & ~dup,
-        weights[ranking_id][None, :] /
+        weights[:, ranking_id] /
         (jnp.float32(c) + pos.astype(jnp.float32)[None, :] + 1.0),
         0.0)                                                    # (B, P)
     # fused[b, j] = sum of contribs at every column holding the same id,
@@ -74,7 +77,7 @@ def _rrf_fuse_device(ids, pos, ranking_id, weights, *, k: int, c: float):
     # rounding sequence is bit-identical to the scalar oracle's dict
     # accumulation — for any number of rankings, not just two.
     fused = jnp.zeros((B, P), jnp.float32)
-    for r in range(weights.shape[0]):
+    for r in range(weights.shape[1]):
         in_r = (ranking_id == r).astype(jnp.float32)            # (P,)
         fused = fused + jnp.sum(
             (contrib * in_r[None, :])[:, None, :] * eq, axis=2)
@@ -92,34 +95,44 @@ def _rrf_fuse_device(ids, pos, ranking_id, weights, *, k: int, c: float):
             jnp.where(live, -neg_s[:, :kk], 0.0))
 
 
-def rrf_fuse_batch(rankings, weights: Sequence[float] = None, c: float = 60.0,
-                   k: int = 10):
+def rrf_fuse_batch(rankings, weights=None, c: float = 60.0, k: int = 10):
     """Batched on-device RRF: `rankings` is a sequence of (B, P_i) id
     matrices, best-first along axis 1 with -1 padding (the stacked dense and
-    sparse retrieval outputs).  Returns device arrays (fused_ids (B, k) i32,
-    fused_scores (B, k) f32), -1/0 beyond each row's fused pool.  Row b
-    equals `rrf_fuse([rankings[0][b], rankings[1][b], ...], weights, c)[:k]`
+    sparse retrieval outputs).  `weights` is either one weight per ranking
+    (shared by the whole batch, the legacy shape) or a (B, R) array giving
+    every batch row its own per-ranking weights — the typed-request API uses
+    the latter so mixed-weight clients still fuse in ONE launch.  Returns
+    device arrays (fused_ids (B, k) i32, fused_scores (B, k) f32), -1/0
+    beyond each row's fused pool.  Row b equals
+    `rrf_fuse([rankings[0][b], rankings[1][b], ...], weights_b, c)[:k]`
     exactly (same ids, same order, same float32 scores)."""
     rankings = [jnp.asarray(r, jnp.int32) for r in rankings]
     if not rankings or rankings[0].shape[0] == 0:
         B = rankings[0].shape[0] if rankings else 0
         return (jnp.full((B, k), -1, jnp.int32),
                 jnp.zeros((B, k), jnp.float32))
-    weights = weights or [1.0] * len(rankings)
+    R = len(rankings)
+    B = rankings[0].shape[0]
+    w = np.asarray([1.0] * R if weights is None else weights, np.float32)
+    if w.ndim == 1:
+        if w.shape != (R,):
+            raise ValueError(f"{w.shape[0]} weights for {R} rankings")
+        w = np.broadcast_to(w, (B, R))
+    elif w.shape != (B, R):
+        raise ValueError(f"weights shape {w.shape} != ({B}, {R})")
     P_sizes = [int(r.shape[1]) for r in rankings]
     pos = np.concatenate([np.arange(p, dtype=np.int32) for p in P_sizes]) \
         if sum(P_sizes) else np.zeros((0,), np.int32)
     ranking_id = np.concatenate(
         [np.full((p,), i, np.int32) for i, p in enumerate(P_sizes)]) \
         if sum(P_sizes) else np.zeros((0,), np.int32)
-    B = rankings[0].shape[0]
     if sum(P_sizes) == 0:
         return (jnp.full((B, k), -1, jnp.int32),
                 jnp.zeros((B, k), jnp.float32))
     ids = jnp.concatenate(rankings, axis=1)
     fused_ids, fused_scores = _rrf_fuse_device(
         ids, jnp.asarray(pos), jnp.asarray(ranking_id),
-        jnp.asarray(weights, jnp.float32), k=k, c=float(c))
+        jnp.asarray(w), k=k, c=float(c))
     P = sum(P_sizes)
     if P < k:
         fused_ids = jnp.pad(fused_ids, ((0, 0), (0, k - P)),

@@ -34,6 +34,7 @@ and embedders without threads can drive the same policy deterministically.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import os
 import threading
@@ -169,6 +170,7 @@ class LifecycleRuntime:
         if store is None:
             store = MemoryStore(embedder, extractor, dim=dim,
                                 use_kernel=use_kernel, tokenizer=tokenizer)
+        poison_file = None
         for seq, record in wal.replay_records(after_seq=after):
             try:
                 store.apply_wal(record)
@@ -177,13 +179,27 @@ class LifecycleRuntime:
                 # embedder emitted garbage) must not brick the directory
                 # forever: stop here — everything before it is a
                 # consistent prefix, exactly like a torn tail
+                poison_file = wal.file_seq_of(seq)
                 warnings.warn(f"WAL replay stopped at seq {seq}: applying "
                               f"the record failed ({e!r}); recovered state "
                               "is the consistent prefix before it",
                               stacklevel=2)
                 break
-        return cls(store, data_dir=data_dir, policy=policy, start=start,
-                   _recovered=True)
+        # an un-replayable tail (corrupt or poison) must not keep shadowing
+        # the seq space: left in place, every segment appended after the
+        # remount would sit behind it and be silently dropped by the NEXT
+        # recovery despite its acknowledged-durable fsync.  Quarantine the
+        # dead files, then fold the recovered state into a fresh snapshot
+        # generation so nothing recovered lives only in memory.
+        dead_from = (poison_file if poison_file is not None
+                     else wal.replay_stopped_seq)
+        if dead_from is not None:
+            wal.quarantine_from(dead_from)
+        rt = cls(store, data_dir=data_dir, policy=policy, start=start,
+                 _recovered=True)
+        if dead_from is not None:
+            rt.rotate()
+        return rt
 
     # -- write path with backpressure --------------------------------------
     def enqueue(self, namespace: str, session_id: str,
@@ -224,6 +240,63 @@ class LifecycleRuntime:
         """Client-facing ops call this; the idle window gating
         auto-compaction measures time since the last call."""
         self._last_activity = time.monotonic()
+
+    # -- group commit -------------------------------------------------------
+    @contextlib.contextmanager
+    def group_commit(self):
+        """Coalesce every WAL record the body emits into ONE fsync'd group
+        segment (`WriteAheadLog.append_group`) written when the block
+        exits.  The scheduler wraps a multi-writer tick in this so a tick's
+        batched flush + evictions + compaction cost one fsync, not one per
+        mutation.
+
+        Commit-ordering contract: the runtime lock is held for the WHOLE
+        block (mutations and their buffered records stay one atomic unit —
+        no snapshot rotation, background flush or direct writer can
+        interleave), and callers must not acknowledge any of the block's
+        writes until this context has exited, because durability moves from
+        per-mutation to the group boundary.  A crash inside the block loses
+        the whole group, never a prefix — recovery replays exactly the
+        groups that reached disk.  The buffered records are appended even
+        when the body raises partway: whatever DID apply in memory must
+        reach the journal, or every later record would replay against
+        missing rows.  If the group append ITSELF fails (disk full, EIO),
+        the in-memory store is irreversibly ahead of the journal — the
+        runtime fail-stops: it detaches the sink, closes, and stops the
+        daemon, so no later record is ever journaled on top of the hole
+        (recovery then yields the consistent prefix through the last
+        durable segment).  Within the block, callers must not wait on the
+        runtime's condition (a Condition.wait under the reentrant lock held
+        twice cannot release it) — drain a full queue instead of blocking
+        on it."""
+        info = {"appended": 0}           # yielded: records actually written
+        if self.wal is None:
+            yield info
+            return
+        with self.lock:
+            if self.store.wal_sink is None:
+                # a closed/unmounted store journals nothing; nothing to group
+                yield info
+                return
+            buffered: list = []
+            prev = self.store.wal_sink
+            self.store.wal_sink = buffered.append
+            try:
+                yield info
+            finally:
+                self.store.wal_sink = prev
+                if buffered:
+                    try:
+                        self.wal.append_group(buffered)
+                        info["appended"] = len(buffered)
+                    except BaseException as e:
+                        # fail-stop: journaling anything further would
+                        # build the log on top of a hole
+                        self.last_error = e
+                        self._closed = True
+                        self._stop.set()
+                        self.store.wal_sink = None
+                        raise
 
     # -- maintenance primitives (escape hatches + daemon body) --------------
     def flush(self) -> int:

@@ -1,0 +1,390 @@
+"""MemoryScheduler — continuous batching for memory operations.
+
+`serving/scheduler.py`'s ContinuousBatcher admits queued generation
+requests into free engine slots between decode steps; this is the same
+idea applied to the memory layer's read/write path.  Real deployments are
+many independent clients (SDK wrappers, server handlers, concurrent
+agents) each issuing ONE operation at a time — exactly the traffic shape
+that pays a solo embed call and a solo device launch per request.  The
+scheduler turns that traffic back into the batched hot path the paper's
+economics assume:
+
+* `submit(request)` is thread-safe and returns a `concurrent.futures.
+  Future[MemoryResponse]`; requests queue until the next tick.
+* each tick collects up to `max_batch` requests inside a bounded
+  micro-batch window (`tick_interval_s` from the first arrival, closing
+  early when the batch fills).  Size `max_batch` to a power of two: the
+  service pads every device batch to the next pow2 Q bucket, so a
+  64-request tick costs exactly what a 33-request tick costs.
+* consecutive RetrieveRequests in a tick run as ONE `MemoryService.
+  execute` call — one embed, one masked `topk_mips`, one stacked BM25, one
+  fused RRF launch — with per-request `top_k`/weights/stages honored
+  inside the shared launches.  N clients submitting single retrieves in
+  the same tick answer bit-identically to N sequential `retrieve()` calls
+  (asserted in tests/test_scheduler.py).
+* writes route through the existing LifecycleRuntime queue, so bounded-
+  queue backpressure and WAL ordering are exactly what a direct caller
+  gets.  With `flush_writes="tick"` (default) a tick that drained
+  RecordRequests ends with ONE batched flush — one embed call, one bank
+  append, one WAL record — and a durable ALL-write tick (several write
+  requests, no retrieves: the multi-writer drain) group-commits its
+  records into one fsync'd WAL segment (`LifecycleRuntime.group_commit`);
+  every write future resolves only after that segment is on disk.  Mixed
+  ticks keep per-op appends — grouping holds the runtime lock, and a
+  retrieve's embed call must stay outside it.
+* submission order is preserved within a tick, so a write submitted before
+  a read is visible to it (read-your-writes through the runtime).
+
+The daemon thread is optional: `run_tick_once()` is the tick body, public
+so tests and single-threaded hosts can drive the identical policy
+deterministically (mirroring `LifecycleRuntime.run_maintenance_once`).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
+
+from repro.core.api import (CompactRequest, EvictRequest, MemoryRequest,
+                            MemoryResponse, RecordRequest, RetrieveRequest)
+
+_REQUEST_TYPES = (RetrieveRequest, RecordRequest, EvictRequest,
+                  CompactRequest)
+
+
+@dataclass
+class _Pending:
+    req: MemoryRequest
+    future: Future
+    t_submit: float
+
+
+class MemoryScheduler:
+    def __init__(self, service, tick_interval_s: float = 0.002,
+                 max_batch: int = 64, flush_writes: str = "tick",
+                 start: bool = True, mount: bool = True):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        if flush_writes not in ("tick", "defer"):
+            raise ValueError(f"flush_writes {flush_writes!r} must be "
+                             "'tick' or 'defer'")
+        self.service = service
+        self.tick_interval_s = float(tick_interval_s)
+        self.max_batch = int(max_batch)
+        self.flush_writes = flush_writes
+        self._queue: deque[_Pending] = deque()
+        self._cv = threading.Condition()
+        self._closed = False
+        self._thread: Optional[threading.Thread] = None
+        self._thread_ident: Optional[int] = None
+        self.last_error: Optional[BaseException] = None
+        self.counters = {"ticks": 0, "requests": 0, "retrieves": 0,
+                         "retrieve_launches": 0, "write_flushes": 0,
+                         "group_commits": 0, "max_tick_batch": 0}
+        if mount:
+            if getattr(service, "scheduler", None) is not None \
+                    and not service.scheduler.closed:
+                raise ValueError("service already has a scheduler mounted")
+            service.scheduler = self
+        self._mounted = mount
+        if start:
+            self.start()
+
+    # -- submission ---------------------------------------------------------
+    def submit(self, request: MemoryRequest) -> Future:
+        """Queue one typed request; resolves to a MemoryResponse at the end
+        of the tick that executes it.  Thread-safe."""
+        return self.submit_many([request])[0]
+
+    def submit_many(self, requests: Sequence[MemoryRequest]) -> List[Future]:
+        """Queue several requests as one adjacent block (they share a tick
+        and, for retrieves, one device launch — plus whatever other clients
+        queued around them)."""
+        for r in requests:
+            if not isinstance(r, _REQUEST_TYPES):
+                raise TypeError(
+                    f"submit() takes typed requests "
+                    f"({', '.join(t.__name__ for t in _REQUEST_TYPES)}), "
+                    f"got {type(r).__name__}")
+        now = time.monotonic()
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("scheduler is closed")
+            pend = [_Pending(r, Future(), now) for r in requests]
+            self._queue.extend(pend)
+            self._cv.notify_all()
+        return [p.future for p in pend]
+
+    def can_submit(self) -> bool:
+        """True when the sync service wrappers should route through this
+        scheduler: it is accepting work, someone will run ticks, and the
+        caller is not the scheduler thread itself (the tick body calls the
+        service's engine directly — re-submitting would deadlock)."""
+        return (not self._closed and self.running
+                and threading.get_ident() != self._thread_ident)
+
+    # -- tick body ----------------------------------------------------------
+    def run_tick_once(self) -> dict:
+        """Drain everything currently queued (up to max_batch) and execute
+        it as one tick.  Public so tests and hosts without the daemon can
+        drive the exact tick policy deterministically."""
+        with self._cv:
+            batch = self._drain_locked()
+        return self._run_tick(batch)
+
+    def _drain_locked(self) -> List[_Pending]:
+        n = min(len(self._queue), self.max_batch)
+        return [self._queue.popleft() for _ in range(n)]
+
+    def _run_tick(self, batch: List[_Pending]) -> dict:
+        if not batch:
+            return {"requests": 0, "retrieve_launches": 0}
+        svc = self.service
+        t_tick = time.monotonic()
+        resolutions: List[tuple] = []          # (future, MemoryResponse)
+        records: List[_Pending] = []
+        launches = 0
+
+        def done(p: _Pending, resp: MemoryResponse) -> None:
+            resp.queued_s = t_tick - p.t_submit
+            resolutions.append((p.future, resp))
+
+        def fail(p: _Pending, op: str, exc: BaseException) -> None:
+            done(p, MemoryResponse(payload=None, op=op, status="error",
+                                   error=repr(exc), exception=exc))
+
+        # a durable ALL-write tick (the multi-writer drain: several record/
+        # evict/compact requests, no retrieves) commits its WAL records as
+        # ONE fsync'd segment.  Mixed ticks fall back to per-op appends:
+        # group_commit holds the runtime lock for the whole block, and a
+        # retrieve's embed call belongs OUTSIDE that lock (it must never
+        # stall the flusher or blocked enqueuers).
+        writes = sum(1 for p in batch
+                     if not isinstance(p.req, RetrieveRequest))
+        rt = getattr(svc, "runtime", None)
+        group = (rt.group_commit() if rt is not None and rt.wal is not None
+                 and writes > 1 and writes == len(batch)
+                 else contextlib.nullcontext())
+        grouped = not isinstance(group, contextlib.nullcontext)
+        ginfo = None
+        try:
+            with group as ginfo:
+                i = 0
+                while i < len(batch):
+                    p = batch[i]
+                    if isinstance(p.req, RetrieveRequest):
+                        run = [p]
+                        while i + len(run) < len(batch) and isinstance(
+                                batch[i + len(run)].req, RetrieveRequest):
+                            run.append(batch[i + len(run)])
+                        t0 = time.monotonic()
+                        try:
+                            payloads = svc.execute([q.req for q in run])
+                        except BaseException as e:
+                            for q in run:
+                                fail(q, "retrieve", e)
+                        else:
+                            dt = time.monotonic() - t0
+                            launches += 1
+                            self.counters["retrieves"] += len(run)
+                            for q, pay in zip(run, payloads):
+                                done(q, MemoryResponse(
+                                    payload=pay, op="retrieve",
+                                    service_s=dt, batch_size=len(run),
+                                    token_count=getattr(pay, "token_count",
+                                                        None)))
+                        i += len(run)
+                        continue
+                    t0 = time.monotonic()
+                    try:
+                        if isinstance(p.req, RecordRequest):
+                            self._enqueue_record(p.req)
+                            records.append(p)
+                        elif isinstance(p.req, EvictRequest):
+                            n = (svc.evict_superseded(p.req.namespace)
+                                 if p.req.superseded_only
+                                 else svc.evict(p.req.namespace))
+                            done(p, MemoryResponse(
+                                payload=n, op="evict",
+                                service_s=time.monotonic() - t0))
+                        elif isinstance(p.req, CompactRequest):
+                            done(p, MemoryResponse(
+                                payload=svc.compact(), op="compact",
+                                service_s=time.monotonic() - t0))
+                    except BaseException as e:
+                        fail(p, type(p.req).__name__, e)
+                    i += 1
+                if records:
+                    self._finish_records(records, done, fail)
+        except BaseException as e:
+            # the group commit itself failed: every write-class future in
+            # this tick resolves to an error — nothing is acknowledged as
+            # durable that is not on disk (retrieve responses stand; reads
+            # promise no durability)
+            self.last_error = e
+            resolutions = [(f, r) for f, r in resolutions
+                           if r.op == "retrieve"]
+            resolved = {id(f) for f, _ in resolutions}
+            for p in batch:
+                if id(p.future) not in resolved:
+                    fail(p, "group", e)
+        if grouped and ginfo is not None and ginfo["appended"]:
+            # count group segments actually written (not grouping attempts:
+            # a failed append or a fail-stopped sink writes nothing)
+            self.counters["group_commits"] += 1
+        # futures resolve only after the (possibly grouped) WAL writes are
+        # durable — a client never observes an ack for a lost write
+        for fut, resp in resolutions:
+            fut.set_result(resp)
+        self.counters["ticks"] += 1
+        self.counters["requests"] += len(batch)
+        self.counters["retrieve_launches"] += launches
+        self.counters["max_tick_batch"] = max(self.counters["max_tick_batch"],
+                                              len(batch))
+        return {"requests": len(batch), "retrieve_launches": launches}
+
+    def _enqueue_record(self, req: RecordRequest) -> None:
+        """Writes go through the existing runtime queue: same bounded-queue
+        backpressure, same WAL ordering as a direct caller.  `"reject"`
+        backpressure raises exactly as it would for a direct caller (the
+        future carries the BackpressureError).  In `"block"` mode a full
+        queue is drained here rather than waited on — the tick thread is
+        itself the consumer, and a Condition.wait under the reentrant
+        group lock could not release it."""
+        svc = self.service
+        rt = getattr(svc, "runtime", None)
+        if rt is not None and rt.policy.max_pending is not None \
+                and rt.policy.backpressure == "block":
+            # drain-and-enqueue under ONE hold of the runtime lock: a
+            # direct writer cannot refill the queue between the flush and
+            # the enqueue, so the enqueue below can never reach the
+            # Condition.wait
+            with rt.lock:
+                if svc.store.pending_count >= rt.policy.max_pending:
+                    svc.store.flush()
+                svc.enqueue(req.namespace, req.session_id,
+                            list(req.messages),
+                            conversation_id=req.conversation_id)
+            return
+        svc.enqueue(req.namespace, req.session_id, list(req.messages),
+                    conversation_id=req.conversation_id)
+
+    def _finish_records(self, records, done, fail) -> None:
+        durable = getattr(self.service, "runtime", None) is not None and \
+            self.service.runtime.wal is not None
+        if self.flush_writes == "defer":
+            for p in records:
+                done(p, MemoryResponse(
+                    payload={"queued": True, "durable": False},
+                    op="record"))
+            return
+        t0 = time.monotonic()
+        try:
+            # one batched flush for every session this tick accepted (plus
+            # anything else pending): one embed call, one bank append, one
+            # WAL record.  Through the store under the runtime guard so the
+            # commit hook still stamps flush times / wakes blocked
+            # enqueuers.
+            with self.service._guard():
+                self.service.store.flush()
+        except BaseException as e:
+            for p in records:
+                fail(p, "record", e)
+            return
+        self.counters["write_flushes"] += 1
+        dt = time.monotonic() - t0
+        for p in records:
+            done(p, MemoryResponse(
+                payload={"queued": True, "flushed": True,
+                         "durable": durable},
+                op="record", service_s=dt, batch_size=len(records)))
+
+    # -- daemon -------------------------------------------------------------
+    def _loop(self) -> None:
+        self._thread_ident = threading.get_ident()
+        while True:
+            with self._cv:
+                while not self._queue and not self._closed:
+                    self._cv.wait()
+                if self._closed and not self._queue:
+                    return
+                # bounded micro-batch window: wait out the tick interval
+                # from the first arrival (letting concurrent clients join
+                # this tick), closing early once the batch is full
+                deadline = time.monotonic() + self.tick_interval_s
+                while (len(self._queue) < self.max_batch
+                       and not self._closed):
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        break
+                    self._cv.wait(timeout=remaining)
+                batch = self._drain_locked()
+            try:
+                self._run_tick(batch)
+            except BaseException as e:       # pragma: no cover - last resort
+                self.last_error = e
+                for p in batch:
+                    if not p.future.done():
+                        p.future.set_result(MemoryResponse(
+                            payload=None, op="tick", status="error",
+                            error=repr(e), exception=e))
+
+    def start(self) -> None:
+        if self._thread is not None and self._thread.is_alive():
+            return
+        self._thread = threading.Thread(target=self._loop,
+                                        name="memori-scheduler", daemon=True)
+        self._thread.start()
+
+    @property
+    def running(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def close(self) -> None:
+        """Stop accepting work, drain everything still queued (no future is
+        left hanging), unmount from the service.  Idempotent."""
+        with self._cv:
+            if self._closed:
+                return
+            self._closed = True
+            self._cv.notify_all()
+        if self._thread is not None \
+                and self._thread is not threading.current_thread():
+            self._thread.join(timeout=10.0)
+        # drain only once the daemon has actually stopped: running ticks
+        # from two threads at once would race the store.  If the daemon is
+        # wedged mid-tick past the join timeout, leave the queue to it.
+        if self._thread is None or not self._thread.is_alive() \
+                or self._thread is threading.current_thread():
+            while True:
+                with self._cv:
+                    batch = self._drain_locked()
+                if not batch:
+                    break
+                self._run_tick(batch)
+        if self._mounted and getattr(self.service, "scheduler", None) is self:
+            self.service.scheduler = None
+
+    def __enter__(self) -> "MemoryScheduler":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- observability ------------------------------------------------------
+    def stats(self) -> dict:
+        with self._cv:
+            depth = len(self._queue)
+        st = dict(self.counters, queue_depth=depth, running=self.running)
+        if st["retrieve_launches"]:
+            st["avg_retrieves_per_launch"] = (st["retrieves"]
+                                              / st["retrieve_launches"])
+        return st

@@ -7,7 +7,10 @@ just `prompt -> str` (a repro.serving engine, or anything else).
 (answer_prompt / retrieve / record_session): a standalone MemoriMemory, or —
 the production shape — a MemoryService namespace view
 (`service.namespace("user/conv")`), so many clients share one packed bank
-and the batched retrieval path."""
+and the batched retrieval path.  When the backing service has a
+MemoryScheduler mounted (`service.start_scheduler()`), every client's
+single-question retrieves coalesce with its concurrent peers into one
+device launch per scheduler tick — the SDK code does not change."""
 from __future__ import annotations
 
 import itertools

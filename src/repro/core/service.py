@@ -43,18 +43,33 @@ Isolation invariants:
   * tombstoned rows (evict / evict_superseded) never surface again, and
     their vectors are physically zeroed (compact() then reclaims them).
 
+The public surface is typed (core/api.py): `retrieve_batch` takes
+`RetrieveRequest`s (tuples still accepted) and runs them through an
+explicit `RetrievalPlan` — embed → dense → sparse → fuse → budget, with
+dense-only / sparse-only / raw (no-budget) variants — in `execute()`, the
+engine behind every read.  Per-request `top_k`, dense/sparse weights and
+stage sets are honored inside the shared launches (fusion at max(k) +
+per-row slicing, a (B, R) weight matrix, -1-masked rankings).  Mount a
+`MemoryScheduler` (`start_scheduler()`, core/scheduler.py) and the sync
+wrappers coalesce concurrent clients' single requests into one batched
+launch per tick — continuous batching for memory ops.
+
 `namespace(name)` returns a MemoriMemory-compatible view, so MemoriClient
 and the serving launchers run against the service unchanged.
 """
 from __future__ import annotations
 
 import contextlib
+import dataclasses
 import warnings
-from typing import List, Optional, Sequence, Tuple
+from typing import Any, List, Optional, Sequence, Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.common.utils import next_pow2
+from repro.core.api import (RawRetrieval, RetrievalPlan, RetrieveRequest,
+                            as_retrieve_request)
 from repro.core.budget import TokenBudgeter
 from repro.core.extraction import Extractor, Message
 from repro.core.hybrid import rrf_fuse_batch
@@ -64,6 +79,17 @@ from repro.core.store import MemoryStore
 from repro.core.summaries import Summary
 from repro.core.triples import Triple
 from repro.data.tokenizer import HashTokenizer
+
+
+@dataclasses.dataclass(frozen=True)
+class _Resolved:
+    """One request's options after plan/service defaults are folded in."""
+    k: int
+    dense_weight: float
+    sparse_weight: float
+    dense: bool
+    sparse: bool
+    budget: bool
 
 
 class MemoryService:
@@ -76,7 +102,8 @@ class MemoryService:
                  store: Optional[MemoryStore] = None,
                  policy: Optional[LifecyclePolicy] = None,
                  data_dir: Optional[str] = None,
-                 runtime: Optional[LifecycleRuntime] = None):
+                 runtime: Optional[LifecycleRuntime] = None,
+                 plan: Optional[RetrievalPlan] = None):
         if store is None and runtime is not None:
             store = runtime.store
         if store is None:
@@ -94,6 +121,10 @@ class MemoryService:
         self.sparse_weight = sparse_weight
         self.pool = pool
         self.flush_every = flush_every
+        self.plan = plan or RetrievalPlan()
+        # a mounted MemoryScheduler (core/scheduler.py) re-routes the sync
+        # read wrappers through its cross-client micro-batching ticks
+        self.scheduler = None
         if runtime is not None:
             if runtime.store is not self.store:
                 raise ValueError("runtime is mounted on a different store")
@@ -164,10 +195,22 @@ class MemoryService:
         return self.runtime.rotate()
 
     def close(self, *, final_snapshot: bool = True) -> None:
-        """Stop the background runtime (final flush + snapshot when
-        durable).  Safe to call on a runtime-less service.  Idempotent."""
+        """Stop the mounted scheduler (drains queued requests) and the
+        background runtime (final flush + snapshot when durable).  Safe to
+        call on a scheduler-less / runtime-less service.  Idempotent."""
+        if self.scheduler is not None:
+            self.scheduler.close()
         if self.runtime is not None:
             self.runtime.close(final_snapshot=final_snapshot)
+
+    def start_scheduler(self, **kwargs):
+        """Mount a MemoryScheduler: from here on the sync read wrappers
+        (`retrieve`, `retrieve_batch`) coalesce with every other client's
+        concurrent requests into one device launch per tick.  Returns the
+        scheduler (also available as `self.scheduler`; the constructor
+        refuses to mount over a live one)."""
+        from repro.core.scheduler import MemoryScheduler
+        return MemoryScheduler(self, **kwargs)
 
     def __enter__(self) -> "MemoryService":
         return self
@@ -198,16 +241,19 @@ class MemoryService:
             return self.store.ingest(namespace, session_id, messages)
 
     def enqueue(self, namespace: str, session_id: str,
-                messages: Sequence[Message]) -> None:
+                messages: Sequence[Message],
+                conversation_id: Optional[str] = None) -> None:
         """Async ingest: queue the session for the next `flush()`.  No
         extraction or embedding happens here.  With a mounted runtime the
         queue is bounded and backpressured per policy (the background
         flusher drains it); `flush_every` additionally triggers a
         count-based flush."""
         if self.runtime is not None:
-            self.runtime.enqueue(namespace, session_id, messages)
+            self.runtime.enqueue(namespace, session_id, messages,
+                                 conversation_id=conversation_id)
         else:
-            self.store.enqueue(namespace, session_id, messages)
+            self.store.enqueue(namespace, session_id, messages,
+                               conversation_id=conversation_id)
         if self.flush_every and self.store.pending_count >= self.flush_every:
             self.flush()
 
@@ -225,12 +271,47 @@ class MemoryService:
 
     # -- read path -------------------------------------------------------------
     def retrieve(self, namespace: str, query: str,
-                 top_k: Optional[int] = None) -> RetrievedContext:
-        return self.retrieve_batch([(namespace, query)], top_k=top_k)[0]
+                 top_k: Optional[int] = None, **options) -> RetrievedContext:
+        """Single-tenant retrieve.  Extra keyword options (`dense_weight`,
+        `sparse_weight`, `stages`) become per-request RetrieveRequest
+        fields.  With a mounted scheduler this coalesces with every other
+        client's concurrent request into one device launch."""
+        req = RetrieveRequest(namespace=namespace, query=query, top_k=top_k,
+                              **options)
+        return self.retrieve_batch([req])[0]
 
-    def retrieve_batch(self, requests: Sequence[Tuple[str, str]],
-                       top_k: Optional[int] = None) -> List[RetrievedContext]:
-        """[(namespace, query), ...] -> per-request RetrievedContext.
+    def retrieve_batch(self, requests: Sequence, top_k: Optional[int] = None,
+                       plan: Optional[RetrievalPlan] = None) -> List[Any]:
+        """Requests -> per-request payloads (RetrievedContext, or
+        RawRetrieval for no-budget plans).  Each request is an
+        (namespace, query) tuple or a `RetrieveRequest` carrying its own
+        `top_k` / weights / stages; the legacy batch-global `top_k` kwarg
+        is the per-request default (explicit per-request values win).
+
+        With a mounted MemoryScheduler the batch is submitted to it, so it
+        fuses with whatever other clients queued in the same tick;
+        otherwise (or with an explicit `plan`) it executes directly.  Either
+        way the results are identical to sequential retrieve() calls."""
+        reqs = [as_retrieve_request(r, top_k) for r in requests]
+        if not reqs:
+            return []
+        sched = self.scheduler
+        if plan is None and sched is not None and sched.can_submit():
+            try:
+                futures = sched.submit_many(reqs)
+            except RuntimeError:
+                # the scheduler closed between can_submit() and the
+                # submission (service shutdown racing a reader) — the
+                # direct engine still answers
+                pass
+            else:
+                return [f.result().result() for f in futures]
+        return self.execute(reqs, plan=plan)
+
+    def execute(self, requests: Sequence[RetrieveRequest],
+                plan: Optional[RetrievalPlan] = None) -> List[Any]:
+        """The retrieval engine: run a batch of typed requests through the
+        plan's stage pipeline in ONE set of device launches.
 
         The cross-tenant hot path: one embed_texts call for every pending
         query, one stable-shape masked topk_mips launch against the
@@ -239,8 +320,12 @@ class MemoryService:
         sparse side, and ONE on-device `rrf_fuse_batch` that fuses every
         request at once; the (B, k) fused ranking crosses to the host in a
         single transfer.  Reads are read-your-writes: pending enqueued
-        sessions are flushed first.  The per-request results are identical
-        to sequential retrieve() calls.
+        sessions are flushed first.  Per-request options are honored inside
+        the shared launches: fusion runs at max(top_k) and each row is
+        sliced to its own k; weights ride in as a (B, R) matrix; a request
+        excluded from a stage has that ranking's ids masked to -1 (so a
+        dense-only request in a mixed batch answers exactly like a
+        dense-only batch).  Stages a WHOLE batch skips are never launched.
 
         Q-shape bucketing: the batch is padded to the next power-of-two
         size before it touches the device (padded queries carry a
@@ -250,10 +335,19 @@ class MemoryService:
         of one per distinct B."""
         if not requests:
             return []
-        # query embedding depends only on the request texts — keep the
-        # (possibly slow, possibly remote) embed call OUTSIDE the runtime
-        # lock so it never stalls the flusher or blocked enqueuers
-        qvecs = self.embedder.embed_texts([q for _, q in requests])
+        plan = plan or self.plan
+        reqs = list(requests)
+        res = [self._resolve(r, plan) for r in reqs]
+        # only the dense search consumes query vectors, so only the
+        # requests whose stage set includes it get embedded (a sparse-only
+        # batch never embeds at all; excluded rows ride as zero vectors —
+        # their dense ranking is masked to -1 regardless).  The (possibly
+        # slow, possibly remote) embed call stays OUTSIDE the runtime lock
+        # so it never stalls the flusher or blocked enqueuers.
+        dense_rows = [i for i, rr in enumerate(res) if rr.dense]
+        qvecs = (self.embedder.embed_texts([reqs[i].query
+                                            for i in dense_rows])
+                 if dense_rows else None)
         with self._guard():
             if self.runtime is not None:
                 self.runtime.note_activity()
@@ -261,13 +355,19 @@ class MemoryService:
                 # through the runtime when mounted: the read-your-writes
                 # drain counts as a flush and wakes blocked enqueuers
                 self.flush()
-            k = top_k or self.top_k
             # reads never allocate tenant state: unknown namespaces stay
             # unknown (no leak from typo'd/adversarial queries, evict()
             # stays evicted)
-            tenants = [self.store.get(ns) for ns, _ in requests]
+            tenants = [self.store.get(r.namespace) for r in reqs]
             vindex = self.store.vindex
-            B = len(requests)
+            B = len(reqs)
+            # fuse at the pow2 ceiling of the largest requested k: k is a
+            # jit-static arg of the fusion, so bucketing it bounds the
+            # executable count under mixed-k traffic (a scheduler tick's
+            # max(k) is whatever clients happened to share it) exactly like
+            # the Q-shape bucketing below; each row still slices to its own
+            # k — the prefix of a wider fusion IS the narrower fusion
+            k_fuse = next_pow2(max(r.k for r in res))
             if vindex.n:
                 # unknown tenants get a never-assigned ns id (>= 0, so it
                 # can't collide with the -1 tombstone label): they match no
@@ -276,43 +376,100 @@ class MemoryService:
                 unused = self.store.namespace_id_count()
                 ns_ids = [t.ns_id if t else unused for t in tenants]
                 Bp = next_pow2(B)
-                qvecs = np.asarray(qvecs, np.float32)
-                if Bp > B:
-                    qvecs = np.concatenate(
-                        [qvecs, np.zeros((Bp - B, qvecs.shape[1]),
-                                         np.float32)])
                 ns_pad = ns_ids + [unused] * (Bp - B)
                 q_ns = np.asarray(ns_pad, np.int32)
-                _, dense_ids = vindex.search_batch(qvecs, q_ns, k=self.pool)
-                _, sparse_ids = self.store.bm25.topk_batch_dev(
-                    [q for _, q in requests] + [""] * (Bp - B),
-                    k=self.pool, namespaces=ns_pad)
+                rankings, weight_cols = [], []
+                if dense_rows:
+                    qv = np.asarray(qvecs, np.float32)
+                    qmat = np.zeros((Bp, qv.shape[1]), np.float32)
+                    qmat[dense_rows] = qv
+                    _, dense_ids = vindex.search_batch(qmat, q_ns,
+                                                       k=self.pool)
+                    dense_ids = self._mask_ranking(
+                        dense_ids, [r.dense for r in res], Bp)
+                    rankings.append(dense_ids)
+                    weight_cols.append(
+                        [r.dense_weight for r in res]
+                        + [self.dense_weight] * (Bp - B))
+                if any(r.sparse for r in res):
+                    _, sparse_ids = self.store.bm25.topk_batch_dev(
+                        [r.query for r in reqs] + [""] * (Bp - B),
+                        k=self.pool, namespaces=ns_pad)
+                    sparse_ids = self._mask_ranking(
+                        sparse_ids, [r.sparse for r in res], Bp)
+                    rankings.append(sparse_ids)
+                    weight_cols.append(
+                        [r.sparse_weight for r in res]
+                        + [self.sparse_weight] * (Bp - B))
                 fused_ids, fused_scores = rrf_fuse_batch(
-                    [dense_ids, sparse_ids],
-                    weights=[self.dense_weight, self.sparse_weight], k=k)
+                    rankings,
+                    weights=np.stack(
+                        [np.asarray(c, np.float32) for c in weight_cols],
+                        axis=1),
+                    k=k_fuse)
                 fused_ids = np.asarray(fused_ids)[:B]
                 fused_scores = np.asarray(fused_scores)[:B]
             else:
-                fused_ids = np.full((B, k), -1, np.int32)
-                fused_scores = np.zeros((B, k), np.float32)
+                fused_ids = np.full((B, k_fuse), -1, np.int32)
+                fused_scores = np.zeros((B, k_fuse), np.float32)
             # result assembly stays under the guard: the fused global row
             # ids are only valid until the next compaction remaps them
-            out: List[RetrievedContext] = []
-            for r, ((ns, qtext), t) in enumerate(zip(requests, tenants)):
+            out: List[Any] = []
+            for r, (rr, t) in enumerate(zip(res, tenants)):
+                # per-request top_k: the fused ranking is sorted best-first,
+                # so its k_r prefix IS the k=k_r fusion of the same inputs
+                ids = fused_ids[r][: rr.k]
+                scs = fused_scores[r][: rr.k]
                 if t is None:
-                    text = MemoriMemory.render([], [])
-                    out.append(RetrievedContext([], [], text,
-                                                self.tokenizer.count(text)))
+                    if rr.budget:
+                        text = MemoriMemory.render([], [])
+                        out.append(RetrievedContext(
+                            [], [], text, self.tokenizer.count(text)))
+                    else:
+                        out.append(RawRetrieval([], [], []))
                     continue
-                scored = [(t.triples.get(self.store.row_tid(int(g))),
-                           float(s))
-                          for g, s in zip(fused_ids[r], fused_scores[r])
-                          if g >= 0]
-                ctx = self.budgeter.select(scored, t.summaries)
-                text = MemoriMemory.render(ctx.triples, ctx.summaries)
-                out.append(RetrievedContext(ctx.triples, ctx.summaries, text,
-                                            self.tokenizer.count(text)))
+                if rr.budget:
+                    scored = [(t.triples.get(self.store.row_tid(int(g))),
+                               float(s))
+                              for g, s in zip(ids, scs) if g >= 0]
+                    ctx = self.budgeter.select(scored, t.summaries)
+                    text = MemoriMemory.render(ctx.triples, ctx.summaries)
+                    out.append(RetrievedContext(ctx.triples, ctx.summaries,
+                                                text,
+                                                self.tokenizer.count(text)))
+                else:
+                    rows = [int(g) for g in ids if g >= 0]
+                    out.append(RawRetrieval(
+                        rows, [self.store.row_tid(g) for g in rows],
+                        [float(s) for g, s in zip(ids, scs) if g >= 0]))
             return out
+
+    def _resolve(self, req: RetrieveRequest, plan: RetrievalPlan) -> _Resolved:
+        """Fold request -> plan -> service option defaults."""
+        stages = req.stages if req.stages is not None else plan.stages
+        dw = (req.dense_weight if req.dense_weight is not None
+              else plan.dense_weight if plan.dense_weight is not None
+              else self.dense_weight)
+        sw = (req.sparse_weight if req.sparse_weight is not None
+              else plan.sparse_weight if plan.sparse_weight is not None
+              else self.sparse_weight)
+        return _Resolved(
+            k=req.top_k or plan.top_k or self.top_k,
+            dense_weight=float(dw), sparse_weight=float(sw),
+            dense="dense" in stages, sparse="sparse" in stages,
+            budget="budget" in stages)
+
+    @staticmethod
+    def _mask_ranking(ids, wants: List[bool], Bp: int):
+        """Drop a ranking for the requests that excluded its stage: their
+        rows become all -1 (fusion padding), so a dense-only request inside
+        a mixed batch fuses exactly like a dense-only batch.  The all-True
+        common case is launch-free."""
+        if all(wants):
+            return ids
+        mask = np.ones((Bp,), bool)
+        mask[: len(wants)] = wants
+        return jnp.where(jnp.asarray(mask)[:, None], ids, -1)
 
     def answer_prompt(self, namespace: str, question: str
                       ) -> Tuple[str, RetrievedContext]:

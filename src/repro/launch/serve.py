@@ -16,6 +16,9 @@ bounds the queue with blocking backpressure; `--snapshot-interval` rotates
 full snapshots (retaining `--snapshot-retain` generations and truncating
 the WAL).  SIGTERM/SIGINT trigger a final flush + snapshot before exit, so
 a container shutdown loses nothing that reached the queue drain.
+`--tick-interval` mounts the cross-client MemoryScheduler: concurrent
+handlers' single retrieves coalesce into one batched device launch per
+tick (`--max-batch` caps the tick; see docs/API.md).
 """
 import argparse
 import os
@@ -42,6 +45,13 @@ def main():
                     help="periodic full-snapshot rotation period in seconds")
     ap.add_argument("--snapshot-retain", type=int, default=2,
                     help="snapshot generations kept by rotation")
+    ap.add_argument("--tick-interval", type=float, default=None,
+                    help="mount a MemoryScheduler: micro-batch window in "
+                         "seconds collecting concurrent clients' requests "
+                         "into one device launch per tick")
+    ap.add_argument("--max-batch", type=int, default=64,
+                    help="scheduler tick size cap (use a power of two: "
+                         "batches pad to pow2 Q buckets anyway)")
     args = ap.parse_args()
     if args.snapshot_interval is not None and args.snapshot_path is None:
         ap.error("--snapshot-interval needs --snapshot-path (rotation "
@@ -95,6 +105,11 @@ def main():
     else:
         service = MemoryService(HashEmbedder(), budget=800, use_kernel=False,
                                 policy=policy if wants_runtime else None)
+    if args.tick_interval is not None:
+        # every handler / SDK client request from here on coalesces with
+        # its concurrent peers into one batched launch per scheduler tick
+        service.start_scheduler(tick_interval_s=args.tick_interval,
+                                max_batch=args.max_batch)
 
     def _shutdown(signum, frame):
         # container shutdown: unwind via SystemExit (flush's all-or-nothing
@@ -118,6 +133,8 @@ def main():
         print(f"retrieved {len(ctx.triples)} triples, "
               f"{ctx.token_count} tokens")
         print("service:", service.stats())
+        if service.scheduler is not None:
+            print("scheduler:", service.scheduler.stats())
         print("engine:", engine.stats)
     finally:
         try:

@@ -70,6 +70,75 @@ def test_wal_append_is_atomic_self_describing_and_ordered(tmp_path):
     assert wal2.append({"op": "c"}) == 3
 
 
+def test_wal_group_append_one_file_consecutive_seqs(tmp_path):
+    wal = WriteAheadLog(str(tmp_path))
+    wal.append({"op": "a"})                                  # seq 1
+    first, last = wal.append_group([{"op": "b"}, {"op": "c"}, {"op": "d"}])
+    assert (first, last) == (2, 4)
+    assert wal.segment_seqs() == [1, 2], "a group is ONE segment file"
+    assert [(s, r["op"]) for s, r in wal.replay_records()] == \
+        [(1, "a"), (2, "b"), (3, "c"), (4, "d")]
+    # a snapshot boundary inside the seq numbering replays only the tail
+    assert [r["op"] for s, r in wal.replay_records(after_seq=3)] == ["d"]
+    assert wal.read_records(2) == [{"op": "b"}, {"op": "c"}, {"op": "d"}]
+    with pytest.raises(CorruptSegmentError, match="group"):
+        wal.read_segment(2)              # the single-record reader refuses
+    # a reopened log continues numbering past the whole group run
+    wal2 = WriteAheadLog(str(tmp_path))
+    assert wal2.append({"op": "e"}) == 5
+    # a 1-record group degenerates to a classic segment
+    assert wal2.append_group([{"op": "f"}]) == (6, 6)
+    assert wal2.read_segment(6) == {"op": "f"}
+
+
+def test_wal_replay_skips_covered_segments_without_reading(
+        tmp_path, monkeypatch):
+    """Segments fully covered by the snapshot are skipped by NAME — no
+    read, no checksum (recovery I/O scales with the uncovered tail, not
+    the retained log) — and a corrupt covered segment cannot stop replay."""
+    wal = WriteAheadLog(str(tmp_path))
+    for op in ("a", "b", "c"):
+        wal.append({"op": op})
+    with open(os.path.join(str(tmp_path), "wal-00000001.msgpack"),
+              "wb") as f:
+        f.write(b"garbage")              # covered AND corrupt
+    reads = []
+    real = wal.read_records
+
+    def spy(seq):
+        reads.append(seq)
+        return real(seq)
+
+    monkeypatch.setattr(wal, "read_records", spy)
+    assert [r["op"] for _, r in wal.replay_records(after_seq=2)] == ["c"]
+    assert reads == [3], f"covered segments were read: {reads}"
+
+
+def test_wal_torn_group_segment_replays_all_or_nothing(tmp_path):
+    """A corrupt/torn group segment must contribute NOTHING: recovery may
+    never apply a prefix of a group (its records were acknowledged as one
+    durability unit)."""
+    wal = WriteAheadLog(str(tmp_path))
+    wal.append({"op": "a"})
+    wal.append_group([{"op": "b"}, {"op": "c"}])             # seqs 2-3
+    wal.append({"op": "late"})                               # seq 4
+    path = os.path.join(str(tmp_path), "wal-00000002.msgpack")
+    with open(path, "rb") as f:
+        blob = f.read()
+    with open(path, "wb") as f:
+        f.write(blob[: len(blob) // 2])
+    with pytest.warns(UserWarning, match="replay stopped"):
+        ops = [r["op"] for _, r in wal.replay_records()]
+    assert ops == ["a"], \
+        "nothing from (or past) a torn group segment may be applied"
+    # a corrupt group whose NAME looks covered but whose tail may straddle
+    # past the snapshot coverage must also stop replay — applying seq 4 on
+    # top of the unreadable (possibly-lost) seq 3 would build on a hole
+    with pytest.warns(UserWarning, match="replay stopped"):
+        got = [r["op"] for _, r in wal.replay_records(after_seq=2)]
+    assert got == []
+
+
 def test_wal_replay_stops_at_corruption(tmp_path):
     wal = WriteAheadLog(str(tmp_path))
     for op in ("a", "b", "c"):
@@ -187,6 +256,37 @@ def test_corrupt_newest_snapshot_falls_back_a_generation(tmp_path):
                                          budget=800)
     # older generation + the WAL tail it still covers == full state
     _contexts_equal(restored.retrieve_batch(QUERIES), want)
+
+
+def test_recover_quarantines_unreplayable_tail_so_new_writes_survive(
+        tmp_path):
+    """A corrupt tail stops replay — but it must not keep shadowing the
+    seq space: recovery quarantines the dead files and re-baselines, so
+    records appended AFTER the remount survive the NEXT recovery (instead
+    of being silently dropped behind the corrupt file forever)."""
+    svc, rt = _mounted(tmp_path)
+    svc.record("a/c0", "s0", _session(["I live in Tallinn."],
+                                      speaker="A"))
+    svc.record("b/c0", "s0", _session(["I live in Porto."], speaker="B"))
+    last = rt.wal.segment_seqs()[-1]
+    with open(os.path.join(rt.wal.dir, f"wal-{last:08d}.msgpack"),
+              "wb") as f:
+        f.write(b"garbage")              # media-corrupt the newest segment
+    with pytest.warns(UserWarning) as rec:   # "replay stopped" + quarantine
+        r1 = MemoryService.recover(str(tmp_path / "data"), HashEmbedder(),
+                                   use_kernel=False, budget=800)
+    assert any("quarantined" in str(w.message) for w in rec)
+    q = "Which city does the user live in?"
+    assert r1.retrieve("a/c0", q).triples, "prefix before the tear survives"
+    assert not r1.retrieve("b/c0", q).triples, "torn tail is lost"
+    # remounted service accepts new durable writes...
+    r1.record("c/c0", "s0", _session(["I live in Quito."], speaker="C"))
+    r1.close(final_snapshot=False)
+    # ...and a SECOND recovery still sees them
+    r2 = MemoryService.recover(str(tmp_path / "data"), HashEmbedder(),
+                               use_kernel=False, budget=800)
+    assert any(t.object == "quito" for t in r2.retrieve("c/c0", q).triples)
+    assert r1.retrieve("a/c0", q).text == r2.retrieve("a/c0", q).text
 
 
 def test_mounting_wal_on_populated_store_writes_baseline(tmp_path):
@@ -581,8 +681,9 @@ def test_runtime_preserves_zero_recompiles_and_zero_bank_uploads(
     """The PR-3 acceptance contract, extended to the lifecycle runtime:
     across full runtime cycles — enqueue -> background-path flush ->
     retrieve_batch -> evict -> auto-compact -> snapshot rotation — the
-    steady state stays at zero recompiles and zero bank-sized host->device
-    transfers (compaction now repacks the device buffers in place)."""
+    steady state stays at zero recompiles, zero bank-sized host->device
+    transfers AND zero BM25 doc-block transfers (both the dense bank and
+    the sparse (capacity, L) doc block repack device-side in place)."""
     policy = LifecyclePolicy(compact_tombstone_ratio=0.01,
                              compact_min_tombstones=1, compact_idle_s=0.0)
     svc, rt = _mounted(tmp_path, policy=policy)
@@ -590,6 +691,7 @@ def test_runtime_preserves_zero_recompiles_and_zero_bank_uploads(
                ("perm1/c0", "Which city does the user live in?"),
                ("nobody/c0", "Which city does the user live in?")]
     cap, dim = svc.vindex.capacity, svc.vindex.dim
+    bm_block = svc.bm25._docs.shape[0] * svc.bm25.max_doc_len * 4
 
     def cycle(i):
         svc.enqueue(f"perm{i}/c0", "s0",
@@ -604,12 +706,17 @@ def test_runtime_preserves_zero_recompiles_and_zero_bank_uploads(
 
     for i in range(3):                   # warm every executable in the loop
         cycle(i)
-    uploads = []
+    uploads, bm_uploads = [], []
+    # vi_mod.jnp IS jax.numpy, shared with the bm25 module — one spy
+    # observes both the bank-sized and the doc-block-sized transfers
     real_asarray = vi_mod.jnp.asarray
 
     def spy_asarray(x, *a, **kw):
-        if getattr(x, "nbytes", 0) >= cap * dim * 4:
+        nbytes = getattr(x, "nbytes", 0)
+        if nbytes >= cap * dim * 4:
             uploads.append(np.shape(x))
+        elif nbytes >= bm_block:
+            bm_uploads.append(np.shape(x))
         return real_asarray(x, *a, **kw)
 
     monkeypatch.setattr(vi_mod.jnp, "asarray", spy_asarray)
@@ -618,6 +725,8 @@ def test_runtime_preserves_zero_recompiles_and_zero_bank_uploads(
             cycle(i)
     assert cc.count == 0, f"runtime cycle recompiled: {cc.msgs[:5]}"
     assert uploads == [], f"bank-sized host->device transfers: {uploads}"
+    assert bm_uploads == [], \
+        f"BM25 doc-block host->device transfers: {bm_uploads}"
     assert svc.vindex.capacity == cap, "compaction must keep the capacity"
     # and the data is still right after all that churn
     ctx = svc.retrieve("perm0/c0", "Which city does the user live in?")

@@ -256,6 +256,28 @@ def test_bm25_namespace_scoping_matches_isolated_index():
         assert set(i_shared.tolist()) <= set(ids_a)
 
 
+def test_bm25_device_side_compact_matches_fresh_index():
+    """compact() on a warm index repacks the device doc block in place
+    (donated gather, no re-upload): scoring afterwards must equal a fresh
+    index built from the surviving docs."""
+    idx = BM25Index()
+    idx.add(["apple pie", "banana split", "apple tart", "cherry cake"],
+            namespace=[0, 0, 1, 0])
+    idx.topk("apple", k=4, namespace=0)       # warm the device buffers
+    idx.remove([1])
+    assert idx._docs_dev is not None
+    idx.compact()                             # device-side repack path
+    fresh = BM25Index()
+    fresh.add(["apple pie", "apple tart", "cherry cake"],
+              namespace=[0, 1, 0])
+    for q in ["apple", "cherry cake", "banana"]:
+        for ns in (None, 0, 1):
+            s1, i1 = idx.topk(q, k=4, namespace=ns)
+            s2, i2 = fresh.topk(q, k=4, namespace=ns)
+            np.testing.assert_allclose(s1, s2, rtol=1e-6)
+            np.testing.assert_array_equal(i1, i2)
+
+
 def test_bm25_remove_tombstones_docs():
     idx = BM25Index()
     idx.add(["apple pie", "apple tart", "banana split"])
