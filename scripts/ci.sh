@@ -42,4 +42,13 @@ if [[ "${FAST_ONLY:-0}" != "1" ]]; then
         --json BENCH_scheduler.json
     echo "== BENCH_scheduler.json =="
     cat BENCH_scheduler.json
+
+    echo "== bench: per-tenant QoS (1 abusive + N well-behaved tenants) =="
+    # asserts one flooding tenant degrades well-behaved p99 by < 2x vs the
+    # no-abuser baseline (admission control protects the fleet)
+    JAX_PLATFORMS=cpu python benchmarks/qos_bench.py \
+        --clients 40 --tenants 10 --seconds 2 --assert-protection 2.0 \
+        --json BENCH_qos.json
+    echo "== BENCH_qos.json =="
+    cat BENCH_qos.json
 fi

@@ -32,9 +32,10 @@ from __future__ import annotations
 
 import os
 import re
+import time
 import warnings
 import zlib
-from typing import Iterator, List, Optional, Tuple
+from typing import Dict, Iterator, List, Optional, Tuple
 
 import msgpack
 
@@ -316,7 +317,13 @@ class WriteAheadLog:
             raise FileNotFoundError(
                 f"no snapshot file for wal_through={wal_through}")
         keep = snaps[-retain:] if retain else snaps
-        self.write_manifest(keep)
+        # carry each retained generation's recorded birth forward; the one
+        # being committed (no prior record) is born now.  Births live in the
+        # manifest, not in file mtimes: a restore/copy rewrites mtimes, and
+        # the mount path's snapshot-age accounting must survive that.
+        births = self.snapshot_births()
+        now = time.time()
+        self.write_manifest(keep, {s: births.get(s, now) for s, _ in keep})
         dropped_snaps = 0
         for through, path in snaps[:-retain] if retain else []:
             os.unlink(path)
@@ -334,15 +341,36 @@ class WriteAheadLog:
                 "truncated_segments": dropped_segs}
 
     # -- manifest (advisory: recovery trusts the directory scan) -----------
-    def write_manifest(self, snaps: List[Tuple[int, str]]) -> None:
+    def write_manifest(self, snaps: List[Tuple[int, str]],
+                       births: Optional[Dict[int, float]] = None) -> None:
+        births = births or {}
+        entries = []
+        for s, p in snaps:
+            entry = {"wal_through": s, "name": os.path.basename(p)}
+            if s in births:
+                entry["born_unix"] = float(births[s])
+            entries.append(entry)
         atomic_write_bytes(os.path.join(self.dir, MANIFEST_NAME),
                            msgpack.packb({
                                "version": SEGMENT_VERSION,
-                               "snapshots": [
-                                   {"wal_through": s,
-                                    "name": os.path.basename(p)}
-                                   for s, p in snaps],
+                               "snapshots": entries,
                            }, use_bin_type=True))
+
+    def snapshot_births(self) -> Dict[int, float]:
+        """Recorded creation time (unix) per snapshot generation, from the
+        manifest.  Generations committed before births were recorded are
+        simply absent — callers fall back to (clamped) file mtime."""
+        manifest = self.read_manifest()
+        if not manifest:
+            return {}
+        out: Dict[int, float] = {}
+        for entry in manifest.get("snapshots", []):
+            try:
+                if "born_unix" in entry:
+                    out[int(entry["wal_through"])] = float(entry["born_unix"])
+            except (TypeError, ValueError, KeyError):
+                continue
+        return out
 
     def read_manifest(self) -> Optional[dict]:
         path = os.path.join(self.dir, MANIFEST_NAME)

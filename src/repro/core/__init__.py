@@ -1,6 +1,10 @@
 # The paper's primary contribution: the Memori persistent memory layer —
 # Advanced Augmentation (triples + summaries), hybrid retrieval over the
 # sharded vector index + hashed BM25, token budgeting, and the SDK wrapper.
+from repro.core.admission import (PRIORITY_HIGH, PRIORITY_LOW,  # noqa: F401
+                                  PRIORITY_NORMAL, AdmissionController,
+                                  AdmissionError, AdmissionPolicy,
+                                  TenantPolicy)
 from repro.core.api import (CompactRequest, EvictRequest,  # noqa: F401
                             MemoryRequest, MemoryResponse, RawRetrieval,
                             RecordRequest, RetrievalPlan, RetrieveRequest)

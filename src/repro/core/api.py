@@ -204,6 +204,87 @@ class MemoryResponse:
         return self.payload
 
 
+# -- wire mapping (serving/frontend.py + the SDK's HTTP mode) ----------------
+#
+# The HTTP surface speaks exactly these types: a JSON body maps onto one
+# typed request (validated by the same __post_init__ checks a direct caller
+# gets), and every response is the MemoryResponse envelope rendered to
+# JSON.  Keeping the codec here — next to the types — means the wire format
+# can never drift from the in-process API.
+
+def message_from_json(obj: dict) -> Message:
+    if not isinstance(obj, dict) or "text" not in obj:
+        raise ValueError("message must be an object with at least 'text'")
+    return Message(speaker=str(obj.get("speaker", "user")),
+                   text=str(obj["text"]),
+                   timestamp=float(obj.get("timestamp", 0.0)))
+
+
+def retrieve_request_from_json(obj: dict, namespace: str) -> RetrieveRequest:
+    """One JSON query object -> RetrieveRequest.  `namespace` is the
+    tenancy-scoped namespace the frontend already resolved (api key ->
+    tenant -> `tenant/<client namespace>`); the body never names a raw
+    service namespace."""
+    stages = obj.get("stages")
+    return RetrieveRequest(
+        namespace=namespace, query=str(obj.get("query", "")),
+        top_k=None if obj.get("top_k") is None else int(obj["top_k"]),
+        dense_weight=(None if obj.get("dense_weight") is None
+                      else float(obj["dense_weight"])),
+        sparse_weight=(None if obj.get("sparse_weight") is None
+                       else float(obj["sparse_weight"])),
+        stages=None if stages is None else tuple(stages))
+
+
+def record_request_from_json(obj: dict, namespace: str) -> RecordRequest:
+    msgs = obj.get("messages")
+    if not isinstance(msgs, list):
+        raise ValueError("record body needs a 'messages' list")
+    return RecordRequest(
+        namespace=namespace,
+        session_id=str(obj.get("session_id", "s0")),
+        messages=tuple(message_from_json(m) for m in msgs),
+        conversation_id=obj.get("conversation_id"))
+
+
+def payload_to_json(payload: Any) -> Any:
+    """Render a response payload for the wire.  RetrievedContext and
+    RawRetrieval become typed objects (`kind` discriminates); ints/dicts
+    (evict counts, record/compact summaries) pass through."""
+    if payload is None or isinstance(payload, (int, float, str, dict)):
+        return payload
+    if isinstance(payload, RawRetrieval):
+        return {"kind": "raw_retrieval", "row_ids": list(payload.row_ids),
+                "triple_ids": list(payload.triple_ids),
+                "scores": list(payload.scores)}
+    # RetrievedContext (duck-typed: core.memory imports this module's
+    # sibling types, so importing it here would cycle)
+    if hasattr(payload, "triples") and hasattr(payload, "text"):
+        return {
+            "kind": "retrieved_context",
+            "text": payload.text,
+            "token_count": payload.token_count,
+            "triples": [dataclasses.asdict(t) for t in payload.triples],
+            "summaries": [dataclasses.asdict(s) for s in payload.summaries],
+        }
+    return repr(payload)
+
+
+def response_to_json(resp: "MemoryResponse") -> dict:
+    """The uniform wire envelope: every field of MemoryResponse except the
+    in-process `exception` object."""
+    return {
+        "status": resp.status,
+        "op": resp.op,
+        "error": resp.error,
+        "payload": payload_to_json(resp.payload),
+        "queued_s": resp.queued_s,
+        "service_s": resp.service_s,
+        "batch_size": resp.batch_size,
+        "token_count": resp.token_count,
+    }
+
+
 def as_retrieve_request(req, top_k: Optional[int] = None) -> RetrieveRequest:
     """Coerce the legacy positional shape — an (namespace, query) tuple —
     into a RetrieveRequest.  A batch-global `top_k` kwarg becomes the

@@ -116,8 +116,17 @@ class LifecycleRuntime:
                     "it (LifecycleRuntime.recover / MemoryService.recover) "
                     "instead of mounting a new store over it")
             if snap is not None:
-                # age of the on-disk generation survives process restarts
-                age = max(0.0, time.time() - os.path.getmtime(snap[1]))
+                # age of the on-disk generation survives process restarts.
+                # The birth recorded in the manifest at commit time is
+                # authoritative — file mtime is only a fallback for
+                # snapshots predating birth records, and is clamped to now
+                # so a doctored/future mtime (restore tools, clock steps)
+                # can never yield a generation "born in the future" that
+                # indefinitely suppresses interval-based rotation
+                born = self.wal.snapshot_births().get(snap[0])
+                if born is None:
+                    born = min(os.path.getmtime(snap[1]), time.time())
+                age = max(0.0, time.time() - born)
                 self._last_snapshot_mono = now - age
             if store.wal_sink is not None:
                 raise ValueError("store already has a wal_sink attached")

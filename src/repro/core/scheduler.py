@@ -35,6 +35,22 @@ economics assume:
 * submission order is preserved within a tick, so a write submitted before
   a read is visible to it (read-your-writes through the runtime).
 
+The tick's drain is no longer FIFO: an `AdmissionController`
+(core/admission.py) owns per-tenant queues and the scheduler asks it to
+*admit* at submit time (token-bucket rate limits, queue caps, fair-share
+shedding — rejections raise `AdmissionError` with a retry-after hint) and
+to *select* each tick's batch (strict priority classes, weighted
+round-robin across tenants, FIFO within a tenant).  One tenant flooding
+`submit()` can therefore no longer starve anyone: its backlog waits in
+its own queue while every other tenant keeps its weight share of each
+tick (asserted in tests/test_admission.py).  Selection decides only WHO
+enters an oversubscribed tick; execution inside the tick returns to
+global submission order, so cross-tenant side-effect ordering (evict
+before compact), read-your-writes, and consecutive-retrieve launch
+sharing are all exactly what the FIFO drain gave.  The default policy
+has no limits and admits everything — a limit-free deployment behaves
+byte-for-byte as before.
+
 The daemon thread is optional: `run_tick_once()` is the tick body, public
 so tests and single-threaded hosts can drive the identical policy
 deterministically (mirroring `LifecycleRuntime.run_maintenance_once`).
@@ -44,16 +60,19 @@ from __future__ import annotations
 import contextlib
 import threading
 import time
-from collections import deque
-from concurrent.futures import Future
+from concurrent.futures import Future, InvalidStateError
 from dataclasses import dataclass
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Union
 
+from repro.core.admission import (AdmissionController, AdmissionPolicy,
+                                  tenant_of)
 from repro.core.api import (CompactRequest, EvictRequest, MemoryRequest,
                             MemoryResponse, RecordRequest, RetrieveRequest)
 
 _REQUEST_TYPES = (RetrieveRequest, RecordRequest, EvictRequest,
                   CompactRequest)
+_OP_NAMES = {RetrieveRequest: "retrieve", RecordRequest: "record",
+             EvictRequest: "evict", CompactRequest: "compact"}
 
 
 @dataclass
@@ -61,12 +80,16 @@ class _Pending:
     req: MemoryRequest
     future: Future
     t_submit: float
+    tenant: str = ""
+    seq: int = 0
 
 
 class MemoryScheduler:
     def __init__(self, service, tick_interval_s: float = 0.002,
                  max_batch: int = 64, flush_writes: str = "tick",
-                 start: bool = True, mount: bool = True):
+                 start: bool = True, mount: bool = True,
+                 admission: Union[AdmissionController, AdmissionPolicy,
+                                  None] = None):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         if flush_writes not in ("tick", "defer"):
@@ -76,7 +99,10 @@ class MemoryScheduler:
         self.tick_interval_s = float(tick_interval_s)
         self.max_batch = int(max_batch)
         self.flush_writes = flush_writes
-        self._queue: deque[_Pending] = deque()
+        if admission is None or isinstance(admission, AdmissionPolicy):
+            admission = AdmissionController(admission)
+        self.admission = admission
+        self._seq = 0
         self._cv = threading.Condition()
         self._closed = False
         self._thread: Optional[threading.Thread] = None
@@ -95,27 +121,43 @@ class MemoryScheduler:
             self.start()
 
     # -- submission ---------------------------------------------------------
-    def submit(self, request: MemoryRequest) -> Future:
+    def submit(self, request: MemoryRequest,
+               tenant: Optional[str] = None) -> Future:
         """Queue one typed request; resolves to a MemoryResponse at the end
-        of the tick that executes it.  Thread-safe."""
-        return self.submit_many([request])[0]
+        of the tick that executes it.  Thread-safe.  Raises AdmissionError
+        when the tenant is over its rate limit or shed under load."""
+        return self.submit_many([request], tenant=tenant)[0]
 
-    def submit_many(self, requests: Sequence[MemoryRequest]) -> List[Future]:
+    def submit_many(self, requests: Sequence[MemoryRequest],
+                    tenant: Optional[str] = None) -> List[Future]:
         """Queue several requests as one adjacent block (they share a tick
         and, for retrieves, one device launch — plus whatever other clients
-        queued around them)."""
+        queued around them).  `tenant` pins the whole block to one QoS
+        identity (the HTTP frontend passes its api-key tenant); without it
+        each request's namespace prefix is the tenant.  Admission is
+        all-or-nothing: a rejected block (AdmissionError) queues nothing."""
         for r in requests:
             if not isinstance(r, _REQUEST_TYPES):
                 raise TypeError(
                     f"submit() takes typed requests "
                     f"({', '.join(t.__name__ for t in _REQUEST_TYPES)}), "
                     f"got {type(r).__name__}")
+        tenants = [tenant if tenant is not None else tenant_of(r)
+                   for r in requests]
+        counts: dict = {}
+        for t in tenants:
+            counts[t] = counts.get(t, 0) + 1
         now = time.monotonic()
         with self._cv:
             if self._closed:
                 raise RuntimeError("scheduler is closed")
-            pend = [_Pending(r, Future(), now) for r in requests]
-            self._queue.extend(pend)
+            self.admission.admit_batch(list(counts.items()))
+            pend = []
+            for r, t in zip(requests, tenants):
+                self._seq += 1
+                pend.append(_Pending(r, Future(), now, t, seq=self._seq))
+            for p in pend:
+                self.admission.push(p.tenant, p)
             self._cv.notify_all()
         return [p.future for p in pend]
 
@@ -137,8 +179,26 @@ class MemoryScheduler:
         return self._run_tick(batch)
 
     def _drain_locked(self) -> List[_Pending]:
-        n = min(len(self._queue), self.max_batch)
-        return [self._queue.popleft() for _ in range(n)]
+        # admission decides WHICH requests enter an oversubscribed tick
+        # (priority, WRR, fair share); within the tick, execution returns
+        # to global submission order — every future in a tick resolves at
+        # the same tick end, so intra-tick order buys no fairness, but it
+        # does decide cross-tenant side-effect semantics (an evict
+        # submitted before a compact must land before it) and keeps
+        # consecutive retrieves sharing one launch exactly as before
+        batch = self.admission.select(self.max_batch)
+        batch.sort(key=lambda p: p.seq)
+        return batch
+
+    @staticmethod
+    def _resolve(future: Future, resp: MemoryResponse) -> None:
+        """Resolve a future, tolerating one already resolved (close() may
+        have error-resolved a stranded request a wedged daemon later got
+        around to)."""
+        try:
+            future.set_result(resp)
+        except InvalidStateError:
+            pass
 
     def _run_tick(self, batch: List[_Pending]) -> dict:
         if not batch:
@@ -148,6 +208,7 @@ class MemoryScheduler:
         resolutions: List[tuple] = []          # (future, MemoryResponse)
         records: List[_Pending] = []
         launches = 0
+        retrieves = 0
 
         def done(p: _Pending, resp: MemoryResponse) -> None:
             resp.queued_s = t_tick - p.t_submit
@@ -190,7 +251,7 @@ class MemoryScheduler:
                         else:
                             dt = time.monotonic() - t0
                             launches += 1
-                            self.counters["retrieves"] += len(run)
+                            retrieves += len(run)
                             for q, pay in zip(run, payloads):
                                 done(q, MemoryResponse(
                                     payload=pay, op="retrieve",
@@ -232,19 +293,24 @@ class MemoryScheduler:
             for p in batch:
                 if id(p.future) not in resolved:
                     fail(p, "group", e)
-        if grouped and ginfo is not None and ginfo["appended"]:
-            # count group segments actually written (not grouping attempts:
-            # a failed append or a fail-stopped sink writes nothing)
-            self.counters["group_commits"] += 1
         # futures resolve only after the (possibly grouped) WAL writes are
         # durable — a client never observes an ack for a lost write
         for fut, resp in resolutions:
-            fut.set_result(resp)
-        self.counters["ticks"] += 1
-        self.counters["requests"] += len(batch)
-        self.counters["retrieve_launches"] += launches
-        self.counters["max_tick_batch"] = max(self.counters["max_tick_batch"],
-                                              len(batch))
+            self._resolve(fut, resp)
+        # counters mutate under the condition lock: stats() snapshots under
+        # the same lock, so /v1/stats never reports a torn view of a tick
+        with self._cv:
+            c = self.counters
+            if grouped and ginfo is not None and ginfo["appended"]:
+                # count group segments actually written (not grouping
+                # attempts: a failed append or a fail-stopped sink writes
+                # nothing)
+                c["group_commits"] += 1
+            c["ticks"] += 1
+            c["requests"] += len(batch)
+            c["retrieves"] += retrieves
+            c["retrieve_launches"] += launches
+            c["max_tick_batch"] = max(c["max_tick_batch"], len(batch))
         return {"requests": len(batch), "retrieve_launches": launches}
 
     def _enqueue_record(self, req: RecordRequest) -> None:
@@ -295,7 +361,8 @@ class MemoryScheduler:
             for p in records:
                 fail(p, "record", e)
             return
-        self.counters["write_flushes"] += 1
+        with self._cv:
+            self.counters["write_flushes"] += 1
         dt = time.monotonic() - t0
         for p in records:
             done(p, MemoryResponse(
@@ -308,15 +375,15 @@ class MemoryScheduler:
         self._thread_ident = threading.get_ident()
         while True:
             with self._cv:
-                while not self._queue and not self._closed:
+                while not self.admission.total_queued and not self._closed:
                     self._cv.wait()
-                if self._closed and not self._queue:
+                if self._closed and not self.admission.total_queued:
                     return
                 # bounded micro-batch window: wait out the tick interval
                 # from the first arrival (letting concurrent clients join
                 # this tick), closing early once the batch is full
                 deadline = time.monotonic() + self.tick_interval_s
-                while (len(self._queue) < self.max_batch
+                while (self.admission.total_queued < self.max_batch
                        and not self._closed):
                     remaining = deadline - time.monotonic()
                     if remaining <= 0:
@@ -329,7 +396,7 @@ class MemoryScheduler:
                 self.last_error = e
                 for p in batch:
                     if not p.future.done():
-                        p.future.set_result(MemoryResponse(
+                        self._resolve(p.future, MemoryResponse(
                             payload=None, op="tick", status="error",
                             error=repr(e), exception=e))
 
@@ -348,9 +415,17 @@ class MemoryScheduler:
     def closed(self) -> bool:
         return self._closed
 
-    def close(self) -> None:
+    def close(self, timeout: float = 10.0) -> None:
         """Stop accepting work, drain everything still queued (no future is
-        left hanging), unmount from the service.  Idempotent."""
+        left hanging), unmount from the service.  Idempotent.
+
+        If the daemon is wedged mid-tick past the join `timeout` (a stuck
+        embedder, a dead device), the queued requests whose tick will never
+        run are NOT left hanging their callers forever: each resolves to an
+        error envelope (`status="error"`, timeout).  Only the requests the
+        wedged tick already drained stay with it — if it ever finishes,
+        their futures resolve normally (and its late set_result on anything
+        we error-resolved is ignored)."""
         with self._cv:
             if self._closed:
                 return
@@ -358,10 +433,9 @@ class MemoryScheduler:
             self._cv.notify_all()
         if self._thread is not None \
                 and self._thread is not threading.current_thread():
-            self._thread.join(timeout=10.0)
+            self._thread.join(timeout=timeout)
         # drain only once the daemon has actually stopped: running ticks
-        # from two threads at once would race the store.  If the daemon is
-        # wedged mid-tick past the join timeout, leave the queue to it.
+        # from two threads at once would race the store.
         if self._thread is None or not self._thread.is_alive() \
                 or self._thread is threading.current_thread():
             while True:
@@ -370,6 +444,18 @@ class MemoryScheduler:
                 if not batch:
                     break
                 self._run_tick(batch)
+        else:
+            # wedged daemon: running its queue from this thread would race
+            # the store, and leaving it queued would strand every caller
+            # blocked on .result() — resolve to error envelopes instead
+            with self._cv:
+                stranded = self.admission.drain_all()
+            for p in stranded:
+                self._resolve(p.future, MemoryResponse(
+                    payload=None, op=_OP_NAMES[type(p.req)], status="error",
+                    error=f"scheduler close() timed out after {timeout}s "
+                          "with the tick daemon wedged; this queued "
+                          "request's tick never ran"))
         if self._mounted and getattr(self.service, "scheduler", None) is self:
             self.service.scheduler = None
 
@@ -381,9 +467,13 @@ class MemoryScheduler:
 
     # -- observability ------------------------------------------------------
     def stats(self) -> dict:
+        # counters snapshot under the same lock their writers hold, so a
+        # concurrent tick can never be observed half-applied
         with self._cv:
-            depth = len(self._queue)
-        st = dict(self.counters, queue_depth=depth, running=self.running)
+            st = dict(self.counters,
+                      queue_depth=self.admission.total_queued,
+                      admission=self.admission.stats())
+        st["running"] = self.running
         if st["retrieve_launches"]:
             st["avg_retrieves_per_launch"] = (st["retrieves"]
                                               / st["retrieve_launches"])

@@ -14,11 +14,17 @@ device launch per scheduler tick — the SDK code does not change."""
 from __future__ import annotations
 
 import itertools
+import json
 import time
+import urllib.error
+import urllib.request
 from typing import Callable, Optional, Protocol, Tuple
 
+from repro.core.admission import AdmissionError
 from repro.core.extraction import Message
 from repro.core.memory import ANSWER_PROMPT, RetrievedContext
+from repro.core.summaries import Summary
+from repro.core.triples import Triple
 
 _session_counter = itertools.count()
 
@@ -28,6 +34,96 @@ class MemoryLike(Protocol):
     def retrieve(self, query: str, top_k=None) -> RetrievedContext: ...
     def record_session(self, conversation_id: str, session_id: str,
                        messages) -> object: ...
+
+
+class HttpMemory:
+    """MemoryLike over the HTTP frontend (serving/frontend.py): the same
+    SDK client, pointed at a remote memory service instead of an in-process
+    one.  `namespace` is the *client* namespace — the server scopes it
+    under the tenant the api key resolves to, so two keys can use the same
+    namespace string without ever seeing each other's memories.
+
+    QoS rejections (HTTP 429) surface as `AdmissionError` with the
+    server's `reason` and `retry_after_s` — the same exception an
+    in-process submit raises, so caller backoff logic is transport-
+    agnostic.  Stdlib urllib only; one request per call (the server side
+    batches across clients, which is where the economics live)."""
+
+    def __init__(self, base_url: str, api_key: str,
+                 namespace: str = "default", timeout_s: float = 60.0):
+        self.base_url = base_url.rstrip("/")
+        self.api_key = api_key
+        self.namespace = namespace
+        self.timeout_s = timeout_s
+
+    # -- transport ----------------------------------------------------------
+    def _post(self, path: str, body: dict) -> dict:
+        req = urllib.request.Request(
+            self.base_url + path, data=json.dumps(body).encode(),
+            headers={"Authorization": f"Bearer {self.api_key}",
+                     "Content-Type": "application/json"})
+        try:
+            with urllib.request.urlopen(req, timeout=self.timeout_s) as r:
+                return json.loads(r.read().decode())
+        except urllib.error.HTTPError as e:
+            detail = {}
+            try:
+                detail = json.loads(e.read().decode())
+            except Exception:
+                pass
+            if e.code == 429:
+                raise AdmissionError(
+                    detail.get("error", "rejected by admission control"),
+                    reason=detail.get("reason", "overloaded"),
+                    retry_after_s=float(detail.get("retry_after_s", 1.0)))
+            raise RuntimeError(
+                f"HTTP {e.code} from {path}: "
+                f"{detail.get('error', e.reason)}") from None
+
+    @staticmethod
+    def _context_from_payload(payload) -> RetrievedContext:
+        if not isinstance(payload, dict) \
+                or payload.get("kind") != "retrieved_context":
+            raise RuntimeError(f"unexpected retrieve payload: {payload!r}")
+        return RetrievedContext(
+            triples=[Triple(**t) for t in payload.get("triples", [])],
+            summaries=[Summary(**s) for s in payload.get("summaries", [])],
+            text=payload.get("text", ""),
+            token_count=int(payload.get("token_count") or 0))
+
+    # -- MemoryLike ---------------------------------------------------------
+    def retrieve(self, query: str, top_k=None) -> RetrievedContext:
+        body = {"namespace": self.namespace, "query": query}
+        if top_k is not None:
+            body["top_k"] = top_k
+        env = self._post("/v1/retrieve", body)
+        if env.get("status") != "ok":
+            raise RuntimeError(env.get("error") or "retrieve failed")
+        return self._context_from_payload(env.get("payload"))
+
+    def answer_prompt(self, question: str) -> Tuple[str, RetrievedContext]:
+        ctx = self.retrieve(question)
+        return ANSWER_PROMPT.format(memories=ctx.text,
+                                    question=question), ctx
+
+    def record_session(self, conversation_id: str, session_id: str,
+                       messages) -> dict:
+        env = self._post("/v1/record", {
+            "namespace": self.namespace,
+            "session_id": session_id,
+            "conversation_id": conversation_id,
+            "messages": [{"speaker": m.speaker, "text": m.text,
+                          "timestamp": m.timestamp} for m in messages]})
+        if env.get("status") != "ok":
+            raise RuntimeError(env.get("error") or "record failed")
+        return env.get("payload") or {}
+
+    def stats(self) -> dict:
+        req = urllib.request.Request(
+            self.base_url + "/v1/stats",
+            headers={"Authorization": f"Bearer {self.api_key}"})
+        with urllib.request.urlopen(req, timeout=self.timeout_s) as r:
+            return json.loads(r.read().decode())
 
 
 class MemoriClient:

@@ -68,6 +68,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.common.utils import next_pow2
+from repro.core.admission import AdmissionError
 from repro.core.api import (RawRetrieval, RetrievalPlan, RetrieveRequest,
                             as_retrieve_request)
 from repro.core.budget import TokenBudgeter
@@ -299,6 +300,11 @@ class MemoryService:
         if plan is None and sched is not None and sched.can_submit():
             try:
                 futures = sched.submit_many(reqs)
+            except AdmissionError:
+                # a QoS rejection (rate limit / shed) must surface, not
+                # sneak through the direct engine — falling back would let
+                # every rate-limited caller bypass admission control
+                raise
             except RuntimeError:
                 # the scheduler closed between can_submit() and the
                 # submission (service shutdown racing a reader) — the

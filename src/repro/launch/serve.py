@@ -19,6 +19,20 @@ a container shutdown loses nothing that reached the queue drain.
 `--tick-interval` mounts the cross-client MemoryScheduler: concurrent
 handlers' single retrieves coalesce into one batched device launch per
 tick (`--max-batch` caps the tick; see docs/API.md).
+
+`--http-port` exposes the memory layer over HTTP (serving/frontend.py):
+
+    PYTHONPATH=src python -m repro.launch.serve --host-demo \
+        --tick-interval 0.002 --http-port 8080 \
+        --api-keys secret1=acme,secret2=beta \
+        --qos-rate 50 --qos-burst 100 --qos-max-queued 256
+
+`--api-keys` maps each api key to its tenant; every request's namespace is
+scoped under its tenant, and the tenant is the QoS identity admission
+control charges.  The `--qos-*` flags set the default per-tenant contract
+(token-bucket rate limit, backlog cap) and the global shed threshold —
+rejections surface as HTTP 429 + Retry-After (see docs/OPERATIONS.md for
+tuning).  QoS needs the scheduler, so `--qos-*` requires --tick-interval.
 """
 import argparse
 import os
@@ -52,10 +66,37 @@ def main():
     ap.add_argument("--max-batch", type=int, default=64,
                     help="scheduler tick size cap (use a power of two: "
                          "batches pad to pow2 Q buckets anyway)")
+    ap.add_argument("--http-port", type=int, default=None,
+                    help="serve the memory layer over HTTP on this port "
+                         "(0 = ephemeral); requires --api-keys")
+    ap.add_argument("--http-host", default="0.0.0.0",
+                    help="HTTP bind address (default 0.0.0.0)")
+    ap.add_argument("--api-keys", default=None,
+                    help="comma-separated key=tenant pairs; the key "
+                         "authenticates, the tenant scopes namespaces and "
+                         "is the QoS identity")
+    ap.add_argument("--qos-rate", type=float, default=None,
+                    help="default per-tenant rate limit in req/s "
+                         "(token bucket; rejections are 429 on the wire)")
+    ap.add_argument("--qos-burst", type=int, default=32,
+                    help="token-bucket burst capacity per tenant")
+    ap.add_argument("--qos-max-queued", type=int, default=None,
+                    help="per-tenant backlog cap (shed above it)")
+    ap.add_argument("--qos-max-queued-global", type=int, default=None,
+                    help="global backlog cap; tenants above their "
+                         "weight-proportional fair share are shed first")
     args = ap.parse_args()
     if args.snapshot_interval is not None and args.snapshot_path is None:
         ap.error("--snapshot-interval needs --snapshot-path (rotation "
                  "without a durable directory would silently no-op)")
+    if args.http_port is not None and not args.api_keys:
+        ap.error("--http-port needs --api-keys (an unauthenticated frontend "
+                 "would serve every tenant's memory to anyone)")
+    wants_qos = (args.qos_rate is not None or args.qos_max_queued is not None
+                 or args.qos_max_queued_global is not None)
+    if wants_qos and args.tick_interval is None:
+        ap.error("--qos-* flags need --tick-interval (admission control "
+                 "lives in the scheduler's submit path)")
 
     if args.host_demo:
         os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=4 "
@@ -108,8 +149,17 @@ def main():
     if args.tick_interval is not None:
         # every handler / SDK client request from here on coalesces with
         # its concurrent peers into one batched launch per scheduler tick
+        admission = None
+        if wants_qos:
+            from repro.core import AdmissionPolicy, TenantPolicy
+            admission = AdmissionPolicy(
+                default=TenantPolicy(rate=args.qos_rate,
+                                     burst=args.qos_burst,
+                                     max_queued=args.qos_max_queued),
+                max_queued_global=args.qos_max_queued_global)
         service.start_scheduler(tick_interval_s=args.tick_interval,
-                                max_batch=args.max_batch)
+                                max_batch=args.max_batch,
+                                admission=admission)
 
     def _shutdown(signum, frame):
         # container shutdown: unwind via SystemExit (flush's all-or-nothing
@@ -125,18 +175,31 @@ def main():
     llm = lambda p: engine.generate([p[-500:]], max_new_tokens=12)[0]  # noqa: E731
     client = MemoriClient(llm, service.namespace("u0/demo"))
 
+    frontend = None
     try:
-        print(client.chat("I work as a translator and I live in Cusco."))
-        client.end_session()
-        [ctx] = service.retrieve_batch(
-            [("u0/demo", "Where does the user live?")])
-        print(f"retrieved {len(ctx.triples)} triples, "
-              f"{ctx.token_count} tokens")
-        print("service:", service.stats())
-        if service.scheduler is not None:
-            print("scheduler:", service.scheduler.stats())
-        print("engine:", engine.stats)
+        if args.http_port is not None:
+            from repro.serving.frontend import MemoryFrontend
+            keys = dict(pair.split("=", 1)
+                        for pair in args.api_keys.split(","))
+            frontend = MemoryFrontend(service, keys, host=args.http_host,
+                                      port=args.http_port)
+            print(f"memory layer serving on {frontend.address} "
+                  f"({len(keys)} api keys)")
+            frontend.serve_forever()       # until SIGTERM/SIGINT
+        else:
+            print(client.chat("I work as a translator and I live in Cusco."))
+            client.end_session()
+            [ctx] = service.retrieve_batch(
+                [("u0/demo", "Where does the user live?")])
+            print(f"retrieved {len(ctx.triples)} triples, "
+                  f"{ctx.token_count} tokens")
+            print("service:", service.stats())
+            if service.scheduler is not None:
+                print("scheduler:", service.scheduler.stats())
+            print("engine:", engine.stats)
     finally:
+        if frontend is not None:
+            frontend.close()
         try:
             service.close(final_snapshot=args.snapshot_path is not None)
             if args.snapshot_path is not None:

@@ -1,0 +1,417 @@
+"""HTTP serving surface for the memory layer — the network face of the
+typed API (the ROADMAP's "network serving surface with streaming +
+per-tenant QoS").
+
+Stdlib-only (`http.server.ThreadingHTTPServer`; one handler thread per
+connection, all of them funneling into the scheduler's micro-batch ticks —
+the thread-per-request frontend and the batched backend compose exactly
+like the SDK clients do).  Four endpoints:
+
+    POST /v1/retrieve   {"query": ...} or {"queries": [{...}, ...]}
+    POST /v1/record     {"session_id", "messages": [{speaker,text,ts}]}
+    POST /v1/evict      {"namespace", "superseded_only": false}
+    GET  /v1/stats      service + scheduler + admission + frontend counters
+
+**Tenancy** is workspace/api-key shaped (the MemoryLayer SDK surface):
+every request authenticates with `Authorization: Bearer <key>` (or
+`X-Api-Key`), the key maps to a *tenant*, and every namespace the body
+names is scoped to `<tenant>/<namespace>` before it touches the service —
+a key can never read, write, or evict outside its own prefix, and the
+tenant is also the QoS identity the scheduler's admission control
+charges.
+
+**Requests/responses are the typed API on the wire**: bodies decode
+through `core/api.py`'s `*_from_json` codecs (same validation as direct
+callers) and every reply is the `MemoryResponse` envelope via
+`response_to_json`.  Errors use the same envelope with `status="error"`:
+400 for validation, 401 for a bad key, 404 for an unknown route, 429 +
+`Retry-After` when admission control rejects (rate limit / shed /
+backpressure), 504 when a request times out in the queue.
+
+**Streaming**: `{"stream": true}` on /v1/retrieve switches the response
+to chunked transfer, NDJSON framed — one `accepted` event as soon as the
+batch is admitted, one `result` event per request *as its future
+resolves* (completion order, `index` maps back to the submitted order),
+and a final `done` event.  A client fanning one batch across namespaces
+renders early results while late ones still sit in a tick.
+"""
+from __future__ import annotations
+
+import json
+import math
+import threading
+import time
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Dict, List, Mapping, Optional, Tuple
+
+from concurrent.futures import TimeoutError as FutureTimeoutError
+from repro.core.admission import AdmissionError
+from repro.core.api import (CompactRequest, EvictRequest, MemoryResponse,
+                            RecordRequest, RetrieveRequest,
+                            record_request_from_json, response_to_json,
+                            retrieve_request_from_json)
+from repro.core.lifecycle import BackpressureError
+
+_MAX_BODY = 8 << 20          # one request body; sessions are small
+
+
+class _HttpError(Exception):
+    def __init__(self, code: int, message: str,
+                 retry_after_s: Optional[float] = None):
+        super().__init__(message)
+        self.code = code
+        self.retry_after_s = retry_after_s
+
+
+def _json_default(o):
+    """stats() dicts can carry numpy scalars; render them, never crash."""
+    item = getattr(o, "item", None)
+    return item() if callable(item) else repr(o)
+
+
+class MemoryFrontend:
+    """The server object: owns the ThreadingHTTPServer, the api-key ->
+    tenant map, and the request counters.  `service` is a MemoryService;
+    when it has a MemoryScheduler mounted every handler thread submits
+    through it (admission control + cross-client batching), otherwise
+    requests run on the direct engine."""
+
+    def __init__(self, service, api_keys: Mapping[str, str],
+                 host: str = "127.0.0.1", port: int = 0,
+                 request_timeout_s: float = 60.0):
+        if not api_keys:
+            raise ValueError("MemoryFrontend needs at least one api key "
+                             "(api_key -> tenant)")
+        self.service = service
+        self.api_keys: Dict[str, str] = dict(api_keys)
+        self.request_timeout_s = float(request_timeout_s)
+        self.counters = {"requests": 0, "unauthorized": 0, "bad_requests": 0,
+                         "rejected": 0, "errors": 0, "timeouts": 0,
+                         "streams": 0}
+        self._counter_lock = threading.Lock()
+        frontend = self
+
+        class Handler(BaseHTTPRequestHandler):
+            protocol_version = "HTTP/1.1"
+
+            def log_message(self, fmt, *args):   # keep stdout clean
+                pass
+
+            def do_GET(self):
+                frontend._dispatch(self, "GET")
+
+            def do_POST(self):
+                frontend._dispatch(self, "POST")
+
+        class Server(ThreadingHTTPServer):
+            daemon_threads = True
+            # socketserver's default listen backlog of 5 RSTs concurrent
+            # connects the moment a fleet of clients arrives together
+            request_queue_size = 128
+
+        self.server = Server((host, port), Handler)
+        self._thread: Optional[threading.Thread] = None
+
+    # -- lifecycle ----------------------------------------------------------
+    @property
+    def address(self) -> str:
+        host, port = self.server.server_address[:2]
+        return f"http://{host}:{port}"
+
+    def start(self) -> "MemoryFrontend":
+        if self._thread is None or not self._thread.is_alive():
+            self._thread = threading.Thread(target=self.server.serve_forever,
+                                            name="memori-http", daemon=True)
+            self._thread.start()
+        return self
+
+    def serve_forever(self) -> None:
+        self.server.serve_forever()
+
+    def close(self) -> None:
+        self.server.shutdown()
+        self.server.server_close()
+
+    def __enter__(self) -> "MemoryFrontend":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- plumbing -----------------------------------------------------------
+    def _count(self, key: str) -> None:
+        with self._counter_lock:
+            self.counters[key] += 1
+
+    def _auth(self, handler) -> str:
+        auth = handler.headers.get("Authorization", "")
+        key = auth[7:] if auth.startswith("Bearer ") else \
+            handler.headers.get("X-Api-Key", "")
+        tenant = self.api_keys.get(key)
+        if tenant is None:
+            self._count("unauthorized")
+            raise _HttpError(401, "unknown api key")
+        return tenant
+
+    @staticmethod
+    def _body(handler) -> dict:
+        length = int(handler.headers.get("Content-Length") or 0)
+        if length > _MAX_BODY:
+            raise _HttpError(413, f"body over {_MAX_BODY} bytes")
+        raw = handler.rfile.read(length) if length else b"{}"
+        try:
+            obj = json.loads(raw or b"{}")
+        except json.JSONDecodeError as e:
+            raise _HttpError(400, f"invalid JSON body: {e}")
+        if not isinstance(obj, dict):
+            raise _HttpError(400, "body must be a JSON object")
+        return obj
+
+    @staticmethod
+    def _scope(tenant: str, namespace) -> str:
+        ns = str(namespace if namespace not in (None, "") else "default")
+        return f"{tenant}/{ns}"
+
+    def _send_json(self, handler, code: int, obj: dict,
+                   retry_after_s: Optional[float] = None) -> None:
+        blob = json.dumps(obj, default=_json_default).encode()
+        handler.send_response(code)
+        handler.send_header("Content-Type", "application/json")
+        handler.send_header("Content-Length", str(len(blob)))
+        if retry_after_s is not None:
+            handler.send_header("Retry-After",
+                                str(max(1, math.ceil(retry_after_s))))
+        handler.end_headers()
+        handler.wfile.write(blob)
+
+    def _error_body(self, message: str, **extra) -> dict:
+        body = {"status": "error", "error": message}
+        body.update(extra)
+        return body
+
+    def _dispatch(self, handler, method: str) -> None:
+        self._count("requests")
+        try:
+            tenant = self._auth(handler)
+            route = (method, handler.path.split("?", 1)[0])
+            if route == ("POST", "/v1/retrieve"):
+                self._handle_retrieve(handler, tenant)
+            elif route == ("POST", "/v1/record"):
+                self._handle_record(handler, tenant)
+            elif route == ("POST", "/v1/evict"):
+                self._handle_evict(handler, tenant)
+            elif route == ("GET", "/v1/stats"):
+                self._handle_stats(handler, tenant)
+            else:
+                raise _HttpError(404, f"unknown route {method} "
+                                      f"{handler.path}")
+        except _HttpError as e:
+            body = self._error_body(str(e))
+            if e.retry_after_s is not None:
+                body["retry_after_s"] = e.retry_after_s
+            self._send_json(handler, e.code, body,
+                            retry_after_s=e.retry_after_s)
+        except AdmissionError as e:
+            # QoS rejection: the one error a well-behaved client must
+            # treat as backoff, not failure
+            self._count("rejected")
+            self._send_json(handler, 429, self._error_body(
+                str(e), reason=e.reason, retry_after_s=e.retry_after_s),
+                retry_after_s=e.retry_after_s)
+        except (ValueError, TypeError) as e:
+            self._count("bad_requests")
+            self._send_json(handler, 400, self._error_body(str(e)))
+        except BrokenPipeError:
+            pass                                  # client went away
+        except Exception as e:                    # pragma: no cover
+            self._count("errors")
+            self._send_json(handler, 500, self._error_body(repr(e)))
+
+    # -- submission ---------------------------------------------------------
+    def _submit(self, requests: List, tenant: str) -> List:
+        """Route typed requests through the mounted scheduler (admission +
+        batching) and return futures; without one, run directly and return
+        pre-resolved envelopes."""
+        sched = getattr(self.service, "scheduler", None)
+        if sched is not None and sched.can_submit():
+            return sched.submit_many(requests, tenant=tenant)
+        return [self._direct(r) for r in requests]
+
+    def _direct(self, req) -> "_Resolved":
+        t0 = time.monotonic()
+        try:
+            if isinstance(req, RetrieveRequest):
+                payload = self.service.execute([req])[0]
+                resp = MemoryResponse(
+                    payload=payload, op="retrieve",
+                    service_s=time.monotonic() - t0,
+                    token_count=getattr(payload, "token_count", None))
+            elif isinstance(req, RecordRequest):
+                self.service.record(req.namespace, req.session_id,
+                                    list(req.messages))
+                durable = getattr(self.service, "runtime", None) is not None \
+                    and self.service.runtime.wal is not None
+                resp = MemoryResponse(
+                    payload={"queued": True, "flushed": True,
+                             "durable": durable},
+                    op="record", service_s=time.monotonic() - t0)
+            elif isinstance(req, EvictRequest):
+                n = (self.service.evict_superseded(req.namespace)
+                     if req.superseded_only
+                     else self.service.evict(req.namespace))
+                resp = MemoryResponse(payload=n, op="evict",
+                                      service_s=time.monotonic() - t0)
+            elif isinstance(req, CompactRequest):
+                resp = MemoryResponse(payload=self.service.compact(),
+                                      op="compact",
+                                      service_s=time.monotonic() - t0)
+            else:                                 # pragma: no cover
+                raise TypeError(type(req).__name__)
+        except AdmissionError:
+            raise
+        except BaseException as e:
+            resp = MemoryResponse(payload=None, op=type(req).__name__,
+                                  status="error", error=repr(e), exception=e)
+        return _Resolved(resp)
+
+    def _wait(self, fut) -> MemoryResponse:
+        try:
+            return fut.result(timeout=self.request_timeout_s)
+        except FutureTimeoutError:
+            self._count("timeouts")
+            raise _HttpError(
+                504, f"request timed out after {self.request_timeout_s}s "
+                     "in the scheduler queue")
+
+    def _respond_envelope(self, handler, resp: MemoryResponse) -> None:
+        body = response_to_json(resp)
+        if resp.ok:
+            self._send_json(handler, 200, body)
+        elif isinstance(resp.exception, (BackpressureError, AdmissionError)):
+            # capacity, not failure: same backoff contract as admission
+            self._count("rejected")
+            retry = getattr(resp.exception, "retry_after_s", 1.0)
+            body["retry_after_s"] = retry
+            self._send_json(handler, 429, body, retry_after_s=retry)
+        else:
+            self._count("errors")
+            self._send_json(handler, 500, body)
+
+    # -- endpoints ----------------------------------------------------------
+    def _handle_retrieve(self, handler, tenant: str) -> None:
+        body = self._body(handler)
+        queries = body.get("queries")
+        single = queries is None
+        if single:
+            queries = [body]
+        if not isinstance(queries, list) or not queries:
+            raise _HttpError(400, "'queries' must be a non-empty list")
+        default_ns = body.get("namespace")
+        reqs = [retrieve_request_from_json(
+                    q, self._scope(tenant, q.get("namespace", default_ns)))
+                for q in queries]
+        futs = self._submit(reqs, tenant)
+        if body.get("stream"):
+            self._stream_results(handler, futs)
+            return
+        resps = [self._wait(f) for f in futs]
+        if single:
+            self._respond_envelope(handler, resps[0])
+        else:
+            ok = all(r.ok for r in resps)
+            self._send_json(handler, 200 if ok else 207,
+                            {"responses": [response_to_json(r)
+                                           for r in resps]})
+
+    def _handle_record(self, handler, tenant: str) -> None:
+        body = self._body(handler)
+        req = record_request_from_json(
+            body, self._scope(tenant, body.get("namespace")))
+        [fut] = self._submit([req], tenant)
+        self._respond_envelope(handler, self._wait(fut))
+
+    def _handle_evict(self, handler, tenant: str) -> None:
+        body = self._body(handler)
+        req = EvictRequest(self._scope(tenant, body.get("namespace")),
+                           superseded_only=bool(body.get("superseded_only",
+                                                         False)))
+        [fut] = self._submit([req], tenant)
+        self._respond_envelope(handler, self._wait(fut))
+
+    def _handle_stats(self, handler, tenant: str) -> None:
+        st = {"service": self.service.stats(),
+              "frontend": dict(self.counters), "tenant": tenant}
+        sched = getattr(self.service, "scheduler", None)
+        if sched is not None:
+            st["scheduler"] = sched.stats()
+        self._send_json(handler, 200, st)
+
+    # -- streaming ----------------------------------------------------------
+    @staticmethod
+    def _write_chunk(handler, obj: dict) -> None:
+        data = (json.dumps(obj, default=_json_default) + "\n").encode()
+        handler.wfile.write(f"{len(data):x}\r\n".encode() + data + b"\r\n")
+        handler.wfile.flush()
+
+    def _stream_results(self, handler, futs: List) -> None:
+        """Chunked NDJSON: `accepted`, then one `result` per request as its
+        future resolves (completion order; `index` is the submitted
+        position), then `done`."""
+        self._count("streams")
+        handler.send_response(200)
+        handler.send_header("Content-Type", "application/x-ndjson")
+        handler.send_header("Transfer-Encoding", "chunked")
+        handler.send_header("Cache-Control", "no-cache")
+        handler.end_headers()
+        self._write_chunk(handler, {"event": "accepted", "count": len(futs)})
+        pending: Dict[int, object] = dict(enumerate(futs))
+        deadline = time.monotonic() + self.request_timeout_s
+        errors = 0
+        while pending:
+            # resolve-order streaming without as_completed's thread pool:
+            # poll the done set, then block briefly on one future so a
+            # stalled tick doesn't spin the handler
+            done_now: List[Tuple[int, MemoryResponse]] = []
+            for i, f in list(pending.items()):
+                if f.done():
+                    done_now.append((i, f.result()))
+                    del pending[i]
+            if not done_now:
+                if time.monotonic() >= deadline:
+                    for i in list(pending):
+                        self._write_chunk(handler, {
+                            "event": "result", "index": i,
+                            "response": {"status": "error",
+                                         "error": "timed out"}})
+                        errors += 1
+                    pending.clear()
+                    break
+                i, f = next(iter(pending.items()))
+                try:
+                    f.result(timeout=min(0.05,
+                                         deadline - time.monotonic()))
+                except Exception:
+                    pass
+                continue
+            for i, resp in done_now:
+                errors += 0 if resp.ok else 1
+                self._write_chunk(handler, {"event": "result", "index": i,
+                                            "response":
+                                                response_to_json(resp)})
+        self._write_chunk(handler, {"event": "done", "count": len(futs),
+                                    "errors": errors})
+        handler.wfile.write(b"0\r\n\r\n")
+        handler.wfile.flush()
+
+
+class _Resolved:
+    """A future-alike for the schedulerless direct path."""
+
+    def __init__(self, resp: MemoryResponse):
+        self._resp = resp
+
+    def result(self, timeout=None) -> MemoryResponse:
+        return self._resp
+
+    def done(self) -> bool:
+        return True

@@ -557,6 +557,68 @@ def test_periodic_rotation_retention(tmp_path):
         [(f"u{i}/c0", "Which city?") for i in range(4)]), want)
 
 
+def test_snapshot_age_uses_recorded_birth_not_mtime(tmp_path):
+    """Satellite regression: the mount path used to age the on-disk
+    generation by its file mtime against time.time() — a restore tool or a
+    clock step that rewrites/doctors mtimes then mis-dated the generation.
+    The birth recorded in the manifest at commit time is authoritative."""
+    svc, rt = _mounted(tmp_path)
+    svc.record("a/c0", "s0", _session(["I live in Oslo."]))
+    rt.rotate()
+    births = rt.wal.snapshot_births()
+    through, path = rt.wal.latest_snapshot()
+    assert through in births
+    assert abs(births[through] - time.time()) < 60
+    rt.close()
+    # doctor the file mtime a day into the future (what a naive copy or a
+    # clock step produces); the recorded birth must win on remount
+    os.utime(path, (time.time() + 86400, time.time() + 86400))
+    store = MemoryStore.restore(path, HashEmbedder(), use_kernel=False)
+    rt2 = LifecycleRuntime(store, data_dir=str(tmp_path / "data"),
+                           start=False, _recovered=True)
+    age = time.monotonic() - rt2._last_snapshot_mono
+    assert 0.0 <= age < 60, \
+        f"age {age}s must come from the recorded birth, not the mtime"
+    rt2.close()
+
+
+def test_snapshot_age_falls_back_to_clamped_mtime_for_legacy_manifest(
+        tmp_path):
+    svc, rt = _mounted(tmp_path)
+    svc.record("a/c0", "s0", _session(["I live in Oslo."]))
+    rt.rotate()
+    through, path = rt.wal.latest_snapshot()
+    # a manifest written before births were recorded: entries lack born_unix
+    rt.wal.write_manifest(rt.wal.snapshots())
+    assert rt.wal.snapshot_births() == {}
+    rt.close()
+    os.utime(path, (time.time() + 86400, time.time() + 86400))
+    store = MemoryStore.restore(path, HashEmbedder(), use_kernel=False)
+    rt2 = LifecycleRuntime(store, data_dir=str(tmp_path / "data"),
+                           start=False, _recovered=True)
+    # future mtime is clamped to "born now": age >= 0, never negative (a
+    # negative age would suppress interval rotation for a whole day)
+    age = time.monotonic() - rt2._last_snapshot_mono
+    assert 0.0 <= age < 60
+    rt2.close()
+
+
+def test_rotation_preserves_prior_generation_births(tmp_path):
+    policy = LifecyclePolicy(snapshot_retain=2)
+    svc, rt = _mounted(tmp_path, policy=policy)
+    svc.record("a/c0", "s0", _session(["I live in Oslo."]))
+    rt.rotate()
+    first_births = rt.wal.snapshot_births()
+    svc.record("b/c0", "s0", _session(["I live in Porto."]))
+    rt.rotate()
+    births = rt.wal.snapshot_births()
+    assert len(births) == 2
+    for through, born in first_births.items():
+        if through in births:        # retained generation keeps its birth
+            assert births[through] == born
+    rt.close()
+
+
 def test_stats_runtime_fields_present_with_and_without_runtime(tmp_path):
     plain = MemoryService(HashEmbedder(), use_kernel=False)
     st = plain.stats()
