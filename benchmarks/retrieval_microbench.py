@@ -27,6 +27,19 @@ Two modes:
 
     PYTHONPATH=src python benchmarks/retrieval_microbench.py --steady
         [--rows 65000] [--batch 8] [--iters 5] [--json BENCH_retrieval.json]
+
+* quantized (`--quantized`): the int8-bank acceptance benchmark.  The same
+  >= 64k-row steady-state serving pattern is timed twice — f32 residency
+  vs int8 codes + per-row scales with the exact-f32 rescore — and the
+  benchmark reports (a) steady-state latency for both, (b) the bank bytes
+  READ per search (the scan is bandwidth-bound, so this is the term the
+  quantized kernel shrinks; ASSERTED >= 2x lower including the rescore
+  gather), and (c) measured recall@k of the quantized index against the
+  exact f32 oracle (`--assert-recall 0.95` gates it in CI).
+
+    PYTHONPATH=src python benchmarks/retrieval_microbench.py --quantized
+        [--rows 65000] [--k 10] [--assert-recall 0.95]
+        [--json BENCH_quantized.json]
 """
 from __future__ import annotations
 
@@ -143,6 +156,83 @@ def run_steady(csv_rows, rows: int = 65000, batch: int = 8, iters: int = 5,
     return csv_rows
 
 
+def run_quantized(csv_rows, rows: int = 65000, batch: int = 8,
+                  iters: int = 5, k: int = 10, n_tenants: int = 32,
+                  assert_recall=None, json_out=None):
+    """f32 vs int8 residency on the same steady-state serving pattern.
+
+    `bank_bytes_read` is the per-search device traffic over the bank scan
+    (the whole capacity-padded bank is streamed once per launch — the
+    kernel is bandwidth-bound at serving batch sizes) plus, for the
+    quantized path, the candidate-gather bytes of the exact rescore.
+    Wall-clock on CPU is indicative; the bytes ratio is the claim."""
+    print(f"\n# Quantized bank — f32 vs int8 + exact rescore "
+          f"(N={rows}, B={batch}, k={k}, D={D}, CPU)")
+    rng = np.random.default_rng(7)
+    base = rng.standard_normal((rows, D)).astype(np.float32)
+    base_ns = (np.arange(rows) % n_tenants).astype(np.int32)
+    q = rng.standard_normal((batch, D)).astype(np.float32)
+    q_ns = (np.arange(batch) % n_tenants).astype(np.int32)
+    new_row = rng.standard_normal((1, D)).astype(np.float32)
+
+    vi_f = VectorIndex(dim=D, use_kernel=False)
+    vi_f.add(base, ns=base_ns)
+    t_f32 = _grow_and_search_loop(
+        lambda: vi_f.add(new_row, ns=[0]),
+        lambda: vi_f.search_batch(q, q_ns, k=k), 1, iters)
+
+    vi_q = VectorIndex(dim=D, use_kernel=False, quantize="int8", rescore=4)
+    vi_q.add(base, ns=base_ns)
+    t_int8 = _grow_and_search_loop(
+        lambda: vi_q.add(new_row, ns=[0]),
+        lambda: vi_q.search_batch(q, q_ns, k=k), 1, iters)
+
+    # recall@k of the quantized index vs the exact f32 oracle (host mirror)
+    s_q, i_q = vi_q.search_batch(q, q_ns, k=k)
+    i_q = np.asarray(i_q)
+    scores = q @ vi_q.bank[: vi_q.n].T
+    mask = vi_q.alive() & (vi_q.row_namespaces()[None, :] == q_ns[:, None])
+    scores = np.where(mask, scores, -np.inf)
+    i_true = np.argsort(-scores, axis=1, kind="stable")[:, :k]
+    recall = float(np.mean([
+        len(set(i_q[r][i_q[r] >= 0]) & set(i_true[r])) / k
+        for r in range(batch)]))
+    hit_rate = (vi_q.counters["rescore_hits"]
+                / max(1, vi_q.counters["rescore_rows"]))
+
+    cap = vi_q.capacity
+    kc = min(cap, 1 << (int(np.ceil(np.log2(max(1, k * vi_q.rescore))))))
+    bytes_f32 = cap * D * 4
+    bytes_int8 = cap * D * 1 + cap * 4 + batch * kc * D * 4  # codes+scales+gather
+    ratio = bytes_f32 / bytes_int8
+    print(f"rows {rows:7d} (capacity {cap}): f32 {t_f32*1e3:8.1f}ms/iter | "
+          f"int8+rescore {t_int8*1e3:8.1f}ms/iter")
+    print(f"bank bytes read/search: f32 {bytes_f32/2**20:7.1f}MiB | "
+          f"int8 {bytes_int8/2**20:7.1f}MiB | ratio {ratio:5.2f}x")
+    print(f"recall@{k} vs f32 oracle: {recall:.3f} | "
+          f"rescore hit rate: {hit_rate:.3f}")
+    if ratio < 2.0:
+        raise AssertionError(
+            f"quantized bank reads only {ratio:.2f}x fewer bytes (< 2x)")
+    if assert_recall is not None and recall < assert_recall:
+        raise AssertionError(
+            f"quantized recall@{k} {recall:.3f} < required {assert_recall}")
+    csv_rows.append((f"retrieval/quantized_N{rows}", t_int8 * 1e6,
+                     f"{ratio:.2f}x fewer bank bytes, recall {recall:.3f}"))
+    if json_out is not None:
+        json_out.append({
+            "rows": rows, "capacity": cap, "batch": batch, "k": k,
+            "rescore": vi_q.rescore, "candidates_per_query": kc,
+            "t_f32_ms": t_f32 * 1e3, "t_int8_ms": t_int8 * 1e3,
+            "bank_bytes_read_f32": bytes_f32,
+            "bank_bytes_read_int8": bytes_int8,
+            "bytes_ratio": ratio,
+            "recall_at_k": recall, "recall_required": assert_recall,
+            "rescore_hit_rate": hit_rate,
+        })
+    return csv_rows
+
+
 def run_quick(csv_rows):
     print("\n# Retrieval microbench — fused topk_mips vs jnp oracle")
     key = jax.random.PRNGKey(0)
@@ -173,13 +263,18 @@ def _time(fn, *args, iters=3):
     return (time.time() - t0) / iters
 
 
-def run(csv_rows, steady: bool = False, rows: int = 65000, batch: int = 8,
-        iters: int = 5, json_path=None):
-    report = {"steady_state": []}
+def run(csv_rows, steady: bool = False, quantized: bool = False,
+        rows: int = 65000, batch: int = 8, iters: int = 5, k: int = 10,
+        assert_recall=None, json_path=None):
+    report = {"steady_state": [], "quantized": []}
     if steady:
         run_steady(csv_rows, rows=rows, batch=batch, iters=iters,
                    json_out=report["steady_state"])
-    else:
+    if quantized:
+        run_quantized(csv_rows, rows=rows, batch=batch, iters=iters, k=k,
+                      assert_recall=assert_recall,
+                      json_out=report["quantized"])
+    if not steady and not quantized:
         run_quick(csv_rows)
     if json_path:
         with open(json_path, "w") as f:
@@ -194,11 +289,19 @@ if __name__ == "__main__":
     ap.add_argument("--steady", action="store_true",
                     help="steady-state device-resident vs host-roundtrip "
                          "comparison + zero-recompile assertion")
+    ap.add_argument("--quantized", action="store_true",
+                    help="f32 vs int8 residency: latency, bank-bytes-read "
+                         "ratio (asserted >= 2x) and recall@k vs the oracle")
     ap.add_argument("--rows", type=int, default=65000)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--iters", type=int, default=5)
+    ap.add_argument("--k", type=int, default=10,
+                    help="top-k for the quantized recall measurement")
+    ap.add_argument("--assert-recall", type=float, default=None,
+                    metavar="R", help="fail if quantized recall@k < R")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write a BENCH_retrieval.json artifact")
     args = ap.parse_args()
-    run([], steady=args.steady, rows=args.rows, batch=args.batch,
-        iters=args.iters, json_path=args.json)
+    run([], steady=args.steady, quantized=args.quantized, rows=args.rows,
+        batch=args.batch, iters=args.iters, k=args.k,
+        assert_recall=args.assert_recall, json_path=args.json)

@@ -28,6 +28,14 @@ if [[ "${FAST_ONLY:-0}" != "1" ]]; then
     echo "== BENCH_retrieval.json =="
     cat BENCH_retrieval.json
 
+    echo "== bench: quantized bank (int8 + exact rescore, 65k-row bank) =="
+    # asserts >= 2x lower bank-bytes-read and recall@10 >= 0.95 vs the
+    # f32 oracle (the acceptance gate for the quantized residency mode)
+    JAX_PLATFORMS=cpu python benchmarks/retrieval_microbench.py \
+        --quantized --assert-recall 0.95 --json BENCH_quantized.json
+    echo "== BENCH_quantized.json =="
+    cat BENCH_quantized.json
+
     echo "== bench: lifecycle soak (flusher + auto-compaction + rotation live) =="
     # asserts the recovered service answers identically to the live one
     JAX_PLATFORMS=cpu python benchmarks/lifecycle_bench.py \

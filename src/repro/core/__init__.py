@@ -19,4 +19,5 @@ from repro.core.service import MemoryService, NamespaceView  # noqa: F401
 from repro.core.store import (MemoryStore, StoreInvariantError,  # noqa: F401
                               TenantState)
 from repro.core.summaries import Summary, SummaryStore  # noqa: F401
+from repro.core.tiering import TierManager, TierPolicy  # noqa: F401
 from repro.core.triples import Triple, TripleStore  # noqa: F401

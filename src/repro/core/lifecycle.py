@@ -45,6 +45,7 @@ from typing import Optional, Sequence
 from repro.checkpoint.wal import WriteAheadLog
 from repro.core.extraction import Extractor, Message
 from repro.core.store import MemoryStore
+from repro.core.tiering import TierPolicy
 
 
 class BackpressureError(RuntimeError):
@@ -69,6 +70,7 @@ class LifecyclePolicy:
     snapshot_interval_s: Optional[float] = None  # periodic full snapshot
     snapshot_retain: int = 2                   # generations kept on disk
     tick_s: float = 0.05                       # daemon wake granularity
+    tier: Optional[TierPolicy] = None          # hot/warm tiered residency
 
     def __post_init__(self):
         if self.backpressure not in ("block", "reject"):
@@ -83,7 +85,8 @@ class LifecyclePolicy:
     def wants_daemon(self) -> bool:
         return (self.flush_interval_s is not None
                 or self.compact_tombstone_ratio is not None
-                or self.snapshot_interval_s is not None)
+                or self.snapshot_interval_s is not None
+                or self.tier is not None)
 
 
 class LifecycleRuntime:
@@ -137,6 +140,11 @@ class LifecycleRuntime:
             if (not has_prior and (store.vindex.n or store.namespaces()
                                    or store.pending_count)):
                 self.rotate()
+        # hot/warm tiering: mount the TierManager on the store so the
+        # write path notes activity and maintenance ticks drive
+        # demotion/promotion (idempotent if the store already has one)
+        if self.policy.tier is not None and store.tiers is None:
+            store.attach_tiers(self.policy.tier)
         # every queue drain — background, read-your-writes, or a direct
         # store.flush() — must stamp the flush clock and wake blocked
         # enqueuers, so the bookkeeping hangs off the store's commit hook
@@ -342,7 +350,8 @@ class LifecycleRuntime:
         tests (and hosts that bring their own scheduler) can drive the
         exact policy the daemon runs, deterministically."""
         p = self.policy
-        did = {"flushed": 0, "compacted": False, "rotated": False}
+        did = {"flushed": 0, "compacted": False, "rotated": False,
+               "tier": None}
         now = time.monotonic()
         with self.lock:
             pending = self.store.pending_count
@@ -366,6 +375,12 @@ class LifecycleRuntime:
                 if now - ref >= p.snapshot_interval_s:
                     self.rotate()
                     did["rotated"] = True
+            if self.store.tiers is not None:
+                # promote namespaces marked by host-fallback retrieves,
+                # demote the coldest past the hot-row budget — batched
+                # pow2 device scatters, under the same lock as every
+                # other bank mutation
+                did["tier"] = self.store.tiers.tick()
         return did
 
     def _daemon(self) -> None:

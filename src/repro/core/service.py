@@ -104,14 +104,16 @@ class MemoryService:
                  policy: Optional[LifecyclePolicy] = None,
                  data_dir: Optional[str] = None,
                  runtime: Optional[LifecycleRuntime] = None,
-                 plan: Optional[RetrievalPlan] = None):
+                 plan: Optional[RetrievalPlan] = None,
+                 quantize: str = "none", rescore: int = 4):
         if store is None and runtime is not None:
             store = runtime.store
         if store is None:
             if embedder is None:
                 raise ValueError("MemoryService needs an embedder or a store")
             store = MemoryStore(embedder, extractor, dim=dim,
-                                use_kernel=use_kernel, tokenizer=tokenizer)
+                                use_kernel=use_kernel, tokenizer=tokenizer,
+                                quantize=quantize, rescore=rescore)
         self.store = store
         self.embedder = store.embedder
         self.extractor = store.extractor
@@ -156,10 +158,14 @@ class MemoryService:
                 tokenizer: HashTokenizer | None = None,
                 **service_kwargs) -> "MemoryService":
         """Rebuild a service from `snapshot(path)`: the restored service
-        answers `retrieve_batch` identically to the one that wrote it."""
-        store = MemoryStore.restore(path, embedder, extractor=extractor,
-                                    use_kernel=use_kernel,
-                                    tokenizer=tokenizer)
+        answers `retrieve_batch` identically to the one that wrote it.
+        `quantize=`/`rescore=` in service_kwargs pick the restored
+        index's device residency mode (snapshots are always f32)."""
+        store = MemoryStore.restore(
+            path, embedder, extractor=extractor, use_kernel=use_kernel,
+            tokenizer=tokenizer,
+            quantize=service_kwargs.pop("quantize", "none"),
+            rescore=service_kwargs.pop("rescore", 4))
         return cls(store=store, **service_kwargs)
 
     @classmethod
@@ -366,6 +372,11 @@ class MemoryService:
             # stays evicted)
             tenants = [self.store.get(r.namespace) for r in reqs]
             vindex = self.store.vindex
+            tiers = self.store.tiers
+            if tiers is not None:
+                for t in tenants:
+                    if t is not None:
+                        tiers.note_retrieve(t.ns_id)
             B = len(reqs)
             # fuse at the pow2 ceiling of the largest requested k: k is a
             # jit-static arg of the fusion, so bucketing it bounds the
@@ -391,6 +402,23 @@ class MemoryService:
                     qmat[dense_rows] = qv
                     _, dense_ids = vindex.search_batch(qmat, q_ns,
                                                        k=self.pool)
+                    if tiers is not None:
+                        # a demoted namespace's rows are absent from the
+                        # device bank: answer those requests from the
+                        # host-mirror masked search (exact, just not
+                        # accelerated) and mark them for promotion — the
+                        # next maintenance tick brings the rows back in
+                        # one batched upload
+                        fb = [i for i in dense_rows
+                              if tenants[i] is not None
+                              and tiers.is_demoted(tenants[i].ns_id)]
+                        if fb:
+                            _, hi = vindex.search_host(
+                                qmat[fb], q_ns[fb], k=self.pool)
+                            dense_ids = np.asarray(dense_ids).copy()
+                            dense_ids[fb] = hi
+                            for i in fb:
+                                tiers.note_host_fallback(tenants[i].ns_id)
                     dense_ids = self._mask_ranking(
                         dense_ids, [r.dense for r in res], Bp)
                     rankings.append(dense_ids)

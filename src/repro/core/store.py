@@ -84,14 +84,23 @@ class PendingSession:
 class MemoryStore:
     def __init__(self, embedder, extractor: Optional[Extractor] = None,
                  dim: int = 256, use_kernel: bool = True,
-                 tokenizer: HashTokenizer | None = None):
+                 tokenizer: HashTokenizer | None = None,
+                 quantize: str = "none", rescore: int = 4):
         self.embedder = embedder
         self.extractor = extractor or RuleExtractor()
         self.tokenizer = tokenizer or default_tokenizer()
         self.dim = dim
         self.use_kernel = use_kernel
-        self.vindex = VectorIndex(dim=dim, use_kernel=use_kernel)
+        # quantize="int8" keeps the f32 host mirror as ground truth
+        # (snapshots/WAL bit-identical) but holds the DEVICE bank as int8
+        # codes + per-row scales searched by the fused dequant kernel with
+        # exact f32 rescore of the top rescore*k candidates
+        self.vindex = VectorIndex(dim=dim, use_kernel=use_kernel,
+                                  quantize=quantize, rescore=rescore)
         self.bm25 = BM25Index(tokenizer=self.tokenizer)
+        # hot/warm tier manager (core/tiering.py) — attach_tiers() mounts
+        # one; when None every row stays device-resident
+        self.tiers = None
         self._tenants: Dict[str, TenantState] = {}
         self._ns_ids: Dict[str, int] = {}      # survives evict(): tombstoned
         #                                        rows keep a retired ns id
@@ -145,6 +154,19 @@ class MemoryStore:
 
     def row_tid(self, row: int) -> int:
         return self._row_tid[row]
+
+    # -- tiering -----------------------------------------------------------
+    def attach_tiers(self, policy=None, clock=None) -> "object":
+        """Mount a hot/warm TierManager (core/tiering.py) on the vector
+        index.  Activity notes flow from the write path (`_apply_flush`)
+        and the service's read path; demotion/promotion run from lifecycle
+        maintenance.  Returns the manager (also at `self.tiers`)."""
+        from repro.core.tiering import TierManager
+        if self.tiers is not None:
+            raise ValueError("a TierManager is already attached")
+        kwargs = {} if clock is None else {"clock": clock}
+        self.tiers = TierManager(self.vindex, policy=policy, **kwargs)
+        return self.tiers
 
     # -- write path: async batched ingestion -------------------------------
     def enqueue(self, namespace: str, session_id: str,
@@ -210,7 +232,10 @@ class MemoryStore:
         live flushes and WAL replay both land here, which is what makes
         replayed state bit-identical to the original commit."""
         for ns, summary, _ in sessions:
-            self.tenant(ns).summaries.add(summary)
+            t = self.tenant(ns)
+            t.summaries.add(summary)
+            if self.tiers is not None:
+                self.tiers.note_record(t.ns_id)
         flat = [(ns, tr) for ns, _, triples in sessions for tr in triples]
         if not flat:
             return
@@ -402,17 +427,21 @@ class MemoryStore:
     def restore(cls, path: str, embedder,
                 extractor: Optional[Extractor] = None,
                 use_kernel: bool = True,
-                tokenizer: HashTokenizer | None = None) -> "MemoryStore":
+                tokenizer: HashTokenizer | None = None,
+                quantize: str = "none", rescore: int = 4) -> "MemoryStore":
         """Reconstruct a store from `snapshot(path)`.  The result answers
         retrieval bit-identically to the store that wrote the snapshot
-        (same bank bytes, same BM25 arrays, same triple/summary text)."""
+        (same bank bytes, same BM25 arrays, same triple/summary text).
+        `quantize`/`rescore` pick the restored index's device residency
+        mode — the snapshot itself is always full-precision."""
         arrays = ckpt_io.load_raw(path)
         meta = msgpack.unpackb(arrays["meta"].tobytes(), raw=False)
         if meta["version"] != SNAPSHOT_VERSION:
             raise StoreInvariantError(
                 f"snapshot version {meta['version']} != {SNAPSHOT_VERSION}")
         store = cls(embedder, extractor, dim=int(meta["dim"]),
-                    use_kernel=use_kernel, tokenizer=tokenizer)
+                    use_kernel=use_kernel, tokenizer=tokenizer,
+                    quantize=quantize, rescore=rescore)
         store.vindex.load_rows(arrays["bank"], arrays["bank_alive"],
                                ns=arrays["row_ns"])
         bm = meta["bm25"]
@@ -448,12 +477,27 @@ class MemoryStore:
                 "evicted": len(t.evicted),
             } for ns, t in self._tenants.items()
         }
-        return {
+        out = {
             "namespaces": len(self._tenants),
             "bank_rows": self.vindex.n,
             "alive_rows": self.vindex.n_alive,
             "tombstones": self.vindex.n_dead,
             "bm25_docs": len(self.bm25),
             "pending": len(self._pending),
+            "bank": {
+                "quantize": self.vindex.quantize,
+                "quantized": self.vindex.quantize != "none",
+                "rescore": self.vindex.rescore,
+                "hot_rows": self.vindex.n_resident,
+                "warm_rows": self.vindex.n_warm,
+                "rescore_hit_rate": (
+                    self.vindex.counters["rescore_hits"]
+                    / self.vindex.counters["rescore_rows"]
+                    if self.vindex.counters["rescore_rows"] else None),
+                **self.vindex.counters,
+            },
             "per_namespace": per_ns,
         }
+        if self.tiers is not None:
+            out["tiering"] = self.tiers.stats()
+        return out

@@ -43,6 +43,32 @@ def topk_mips_masked(queries, bank, q_ns, bank_ns, k: int = 32, *,
                          interpret=interpret)
 
 
+@functools.partial(jax.jit, static_argnames=("k", "block_q", "block_n", "interpret"))
+def topk_mips_quant(queries, bank_i8, scales, k: int = 32, *, n_valid=None,
+                    block_q: int = 128, block_n: int = 512,
+                    interpret: bool | None = None):
+    """Fused dequant+MIPS over an int8 bank with per-row f32 scales: the
+    bank is scanned at 1 byte/element and dequantization happens inside the
+    block loop (scores accumulate in f32).  Same traced-`n_valid`
+    stable-shape contract as topk_mips."""
+    interpret = _interpret_default() if interpret is None else interpret
+    return _tm.topk_mips(queries, bank_i8, k, n_valid=n_valid, scales=scales,
+                         block_q=block_q, block_n=block_n,
+                         interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_q", "block_n", "interpret"))
+def topk_mips_quant_masked(queries, bank_i8, scales, q_ns, bank_ns,
+                           k: int = 32, *, n_valid=None, block_q: int = 128,
+                           block_n: int = 512, interpret: bool | None = None):
+    """Namespace-masked fused dequant+MIPS (see topk_mips_quant /
+    topk_mips_masked)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    return _tm.topk_mips(queries, bank_i8, k, n_valid=n_valid, q_ns=q_ns,
+                         bank_ns=bank_ns, scales=scales, block_q=block_q,
+                         block_n=block_n, interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
                                              "block_q", "block_k", "interpret"))
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,

@@ -23,6 +23,58 @@ def topk_mips_ref(queries, bank, k: int = 32, n_valid=None):
     return scores, idx.astype(jnp.int32)
 
 
+def quantize_rows_ref(bank):
+    """Symmetric per-row int8 quantization (the contract the quantized
+    kernels score against): scale = max|row| / 127, q = round(row / scale)
+    clipped to [-127, 127]; an all-zero row gets scale 0 and zero codes.
+    Returns (codes int8 (N, D), scales f32 (N,)).  Shared by the
+    VectorIndex quantizer and the oracle tests — per-element dequant error
+    is bounded by scale/2."""
+    bank = jnp.asarray(bank, jnp.float32)
+    amax = jnp.max(jnp.abs(bank), axis=1)
+    scale = amax / 127.0
+    inv = jnp.where(scale > 0, 1.0 / jnp.where(scale > 0, scale, 1.0), 0.0)
+    codes = jnp.clip(jnp.round(bank * inv[:, None]), -127, 127)
+    return codes.astype(jnp.int8), scale
+
+
+def _quant_scores(queries, bank_i8, scales):
+    """(Q, N) f32 scores in the fused kernel's exact operation order:
+    contract the int8 codes in f32, THEN multiply by the row scale —
+    `(q · row_i8) * scale`, not `q · (scale * row_i8)` — so oracle and
+    kernel agree to the same rounding and index comparisons stay exact."""
+    s = jnp.einsum("qd,nd->qn", jnp.asarray(queries, jnp.float32),
+                   jnp.asarray(bank_i8).astype(jnp.float32))
+    return s * jnp.asarray(scales, jnp.float32)[None, :]
+
+
+def topk_mips_quant_ref(queries, bank_i8, scales, k: int = 32, n_valid=None):
+    """Quantized-MIPS oracle: top-k over the fused dequant scores."""
+    s = _quant_scores(queries, bank_i8, scales)
+    if n_valid is not None:
+        col = jnp.arange(bank_i8.shape[0], dtype=jnp.int32)[None, :]
+        s = jnp.where(col < n_valid, s, NEG_INF)
+    scores, idx = jax.lax.top_k(s, k)
+    if n_valid is not None:
+        idx = jnp.where(scores > NEG_INF / 2, idx, -1)
+    return scores, idx.astype(jnp.int32)
+
+
+def topk_mips_quant_masked_ref(queries, bank_i8, scales, q_ns, bank_ns,
+                               k: int = 32, n_valid=None):
+    """Namespace-masked quantized-MIPS oracle (see topk_mips_quant_ref)."""
+    s = _quant_scores(queries, bank_i8, scales)
+    ok = jnp.asarray(q_ns, jnp.int32)[:, None] == \
+        jnp.asarray(bank_ns, jnp.int32)[None, :]
+    if n_valid is not None:
+        col = jnp.arange(bank_i8.shape[0], dtype=jnp.int32)[None, :]
+        ok = ok & (col < n_valid)
+    s = jnp.where(ok, s, NEG_INF)
+    scores, idx = jax.lax.top_k(s, k)
+    idx = jnp.where(scores > NEG_INF / 2, idx, -1)
+    return scores, idx.astype(jnp.int32)
+
+
 def topk_mips_masked_ref(queries, bank, q_ns, bank_ns, k: int = 32,
                          n_valid=None):
     """Namespace-masked MIPS oracle: cross-namespace scores become NEG_INF

@@ -11,6 +11,11 @@ like the SDK clients do).  Four endpoints:
     POST /v1/record     {"session_id", "messages": [{speaker,text,ts}]}
     POST /v1/evict      {"namespace", "superseded_only": false}
     GET  /v1/stats      service + scheduler + admission + frontend counters
+    GET  /v1/metrics    the same counters as Prometheus text exposition —
+                        every numeric leaf of service/scheduler/frontend
+                        stats flattened to a `memori_<path>` gauge (tier
+                        hot/warm rows, promotions/demotions, rescore hit
+                        rate, scheduler launch counters, ...)
 
 **Tenancy** is workspace/api-key shaped (the MemoryLayer SDK surface):
 every request authenticates with `Authorization: Bearer <key>` (or
@@ -39,6 +44,7 @@ from __future__ import annotations
 
 import json
 import math
+import re
 import threading
 import time
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
@@ -67,6 +73,49 @@ def _json_default(o):
     """stats() dicts can carry numpy scalars; render them, never crash."""
     item = getattr(o, "item", None)
     return item() if callable(item) else repr(o)
+
+
+def _metric_name(*parts: str) -> str:
+    name = "_".join(re.sub(r"[^a-zA-Z0-9_]", "_", str(p)) for p in parts)
+    return re.sub(r"__+", "_", name)
+
+
+def flatten_metrics(stats: Mapping, prefix: str = "memori") -> List[Tuple[str, float]]:
+    """Flatten a nested stats dict into Prometheus gauge samples: every
+    numeric leaf becomes `<prefix>_<path> <value>` (bools as 0/1, numpy
+    scalars unwrapped, None/str/unbounded-cardinality subtrees skipped).
+    Deterministic order — scrapes diff cleanly."""
+    out: List[Tuple[str, float]] = []
+    for k in stats:
+        v = stats[k]
+        if k == "per_namespace":       # unbounded label cardinality
+            continue
+        name = _metric_name(prefix, k)
+        if isinstance(v, Mapping):
+            out.extend(flatten_metrics(v, prefix=name))
+            continue
+        item = getattr(v, "item", None)
+        if callable(item) and not isinstance(v, (bool, int, float)):
+            try:
+                v = item()
+            except Exception:
+                continue
+        if isinstance(v, bool):
+            out.append((name, 1.0 if v else 0.0))
+        elif isinstance(v, (int, float)) and math.isfinite(v):
+            out.append((name, float(v)))
+    return out
+
+
+def render_prometheus(samples: List[Tuple[str, float]]) -> str:
+    lines = []
+    for name, value in samples:
+        lines.append(f"# TYPE {name} gauge")
+        if value == int(value) and abs(value) < 2 ** 53:
+            lines.append(f"{name} {int(value)}")
+        else:
+            lines.append(f"{name} {value}")
+    return "\n".join(lines) + "\n"
 
 
 class MemoryFrontend:
@@ -202,6 +251,8 @@ class MemoryFrontend:
                 self._handle_evict(handler, tenant)
             elif route == ("GET", "/v1/stats"):
                 self._handle_stats(handler, tenant)
+            elif route == ("GET", "/v1/metrics"):
+                self._handle_metrics(handler)
             else:
                 raise _HttpError(404, f"unknown route {method} "
                                       f"{handler.path}")
@@ -345,6 +396,26 @@ class MemoryFrontend:
         if sched is not None:
             st["scheduler"] = sched.stats()
         self._send_json(handler, 200, st)
+
+    def _handle_metrics(self, handler) -> None:
+        """Prometheus text exposition of every numeric counter: service
+        stats (bank/tier/lifecycle sections included), scheduler stats
+        when one is mounted, frontend counters."""
+        samples = flatten_metrics(self.service.stats(), prefix="memori")
+        sched = getattr(self.service, "scheduler", None)
+        if sched is not None:
+            samples.extend(flatten_metrics(sched.stats(),
+                                           prefix="memori_scheduler"))
+        with self._counter_lock:
+            counters = dict(self.counters)
+        samples.extend(flatten_metrics(counters, prefix="memori_frontend"))
+        blob = render_prometheus(samples).encode()
+        handler.send_response(200)
+        handler.send_header("Content-Type",
+                            "text/plain; version=0.0.4; charset=utf-8")
+        handler.send_header("Content-Length", str(len(blob)))
+        handler.end_headers()
+        handler.wfile.write(blob)
 
     # -- streaming ----------------------------------------------------------
     @staticmethod

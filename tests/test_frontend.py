@@ -243,3 +243,73 @@ def test_concurrent_http_clients_share_scheduler_ticks(frontend):
     # batching happened: fewer launches than retrieves
     assert stats["scheduler"]["retrieve_launches"] \
         < stats["scheduler"]["retrieves"]
+
+
+def _scrape(fe, key="key-acme"):
+    req = urllib.request.Request(
+        fe.address + "/v1/metrics",
+        headers={"Authorization": f"Bearer {key}"})
+    with urllib.request.urlopen(req, timeout=30) as r:
+        return r.status, r.read().decode(), r.headers
+
+
+def test_metrics_prometheus_exposition(frontend):
+    _call(frontend, "/v1/record", _record_body())
+    _call(frontend, "/v1/retrieve",
+          {"namespace": "conv0", "query": "Which city?"})
+    st, text, headers = _scrape(frontend)
+    assert st == 200
+    assert headers["Content-Type"].startswith("text/plain")
+    lines = text.splitlines()
+    samples = {}
+    for ln in lines:
+        if ln.startswith("#"):
+            assert ln.startswith("# TYPE memori_") and ln.endswith(" gauge")
+            continue
+        name, val = ln.split(" ")
+        float(val)                       # every sample parses as a number
+        samples[name] = val
+    # one sample line per TYPE line, no duplicates
+    assert len(samples) == sum(1 for ln in lines if ln.startswith("#"))
+    # the layers the dashboard needs are all present
+    for want in ("memori_namespaces", "memori_bank_hot_rows",
+                 "memori_bank_quant_searches",
+                 "memori_scheduler_retrieves",
+                 "memori_frontend_requests"):
+        assert want in samples, f"missing {want}\n{sorted(samples)[:40]}"
+    assert samples["memori_scheduler_retrieves"] == "1"
+    assert int(samples["memori_frontend_requests"]) >= 2
+    # quantization off in this fixture: the knob is still visible as 0
+    assert samples["memori_bank_quantized"] == "0"
+
+
+def test_metrics_requires_auth(frontend):
+    req = urllib.request.Request(frontend.address + "/v1/metrics")
+    with pytest.raises(urllib.error.HTTPError) as ei:
+        urllib.request.urlopen(req, timeout=30)
+    assert ei.value.code == 401
+
+
+def test_metrics_reports_tier_counters():
+    """With quantization + tiering mounted the scrape carries the tier
+    gauges a capacity dashboard alerts on."""
+    from repro.core.lifecycle import LifecyclePolicy
+    from repro.core.tiering import TierPolicy
+    svc = MemoryService(EMB, use_kernel=False, budget=800, quantize="int8",
+                        policy=LifecyclePolicy(
+                            tier=TierPolicy(max_hot_rows=4)))
+    svc.runtime._stop.set()
+    fe = MemoryFrontend(svc, KEYS).start()
+    try:
+        _call(fe, "/v1/record", _record_body())
+        svc.runtime.run_maintenance_once()
+        _, text, _ = _scrape(fe)
+        samples = dict(ln.split(" ") for ln in text.splitlines()
+                       if not ln.startswith("#"))
+        assert samples["memori_bank_quantized"] == "1"
+        assert "memori_tiering_demotions" in samples
+        assert "memori_tiering_hot_rows" in samples
+        assert int(samples["memori_tiering_max_hot_rows"]) == 4
+    finally:
+        fe.close()
+        svc.close(final_snapshot=False)

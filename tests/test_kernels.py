@@ -164,6 +164,150 @@ def test_topk_scores_sorted_and_indices_valid():
 
 
 # ---------------------------------------------------------------------------
+# topk_mips — quantized (int8 bank + per-row scales, fused dequant)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("q_n,bank_n,dim,kk", [
+    (1, 16, 8, 4),
+    (7, 100, 32, 8),
+    (33, 513, 64, 16),       # non-divisible bank vs block
+])
+def test_topk_mips_quant_matches_oracle(q_n, bank_n, dim, kk):
+    q = jax.random.normal(k(41), (q_n, dim))
+    bank = jax.random.normal(k(42), (bank_n, dim))
+    codes, scales = ref.quantize_rows_ref(bank)
+    s, i = ops.topk_mips_quant(q, codes, scales, k=kk,
+                               block_q=32, block_n=64)
+    sr, ir = ref.topk_mips_quant_ref(q, codes, scales, k=kk)
+    assert i.shape == (q_n, kk) and s.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ir))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("q_n,bank_n,dim,kk,n_ns", [
+    (7, 100, 32, 8, 3),
+    (9, 300, 16, 8, 40),     # multi-block bank, every ns owns < kk rows
+])
+def test_topk_mips_quant_masked_matches_oracle(q_n, bank_n, dim, kk, n_ns):
+    q = jax.random.normal(k(43), (q_n, dim))
+    bank = jax.random.normal(k(44), (bank_n, dim))
+    codes, scales = ref.quantize_rows_ref(bank)
+    q_ns = jnp.asarray(np.arange(q_n) % n_ns, jnp.int32)
+    bank_ns = np.arange(bank_n) % n_ns
+    bank_ns[::7] = -1                       # sprinkle tombstones
+    bank_ns = jnp.asarray(bank_ns, jnp.int32)
+    s, i = ops.topk_mips_quant_masked(q, codes, scales, q_ns, bank_ns,
+                                      k=kk, block_q=32, block_n=64)
+    sr, ir = ref.topk_mips_quant_masked_ref(q, codes, scales, q_ns,
+                                            bank_ns, k=kk)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ir))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr),
+                               rtol=1e-4, atol=1e-4)
+    bn = np.asarray(bank_ns)
+    for r in range(q_n):
+        for idx in np.asarray(i)[r]:
+            if idx >= 0:
+                assert bn[idx] == int(q_ns[r])
+
+
+def test_topk_mips_quant_approximates_f32_search():
+    """The fused dequant scan must track the f32 oracle: exact-match
+    recall@k stays high and every dequantized score lands within the
+    per-row quantization error bound of its true score."""
+    D, N, kk = 32, 400, 10
+    q = jax.random.normal(k(45), (6, D))
+    bank = jax.random.normal(k(46), (N, D))
+    codes, scales = ref.quantize_rows_ref(bank)
+    _, i_f = ref.topk_mips_ref(q, bank, k=kk)
+    s_q, i_q = ops.topk_mips_quant(q, codes, scales, k=kk,
+                                   block_q=8, block_n=64)
+    i_f, i_q, s_q = np.asarray(i_f), np.asarray(i_q), np.asarray(s_q)
+    recall = np.mean([len(set(i_f[r]) & set(i_q[r])) / kk
+                      for r in range(6)])
+    assert recall >= 0.9, recall
+    # |q·(scale*codes) - q·row| <= |q|_1 * scale/2 per row
+    qn = np.abs(np.asarray(q)).sum(axis=1)
+    sc = np.asarray(scales)
+    true = np.asarray(q) @ np.asarray(bank).T
+    for r in range(6):
+        for j in range(kk):
+            idx = i_q[r, j]
+            bound = qn[r] * sc[idx] / 2 + 1e-4
+            assert abs(s_q[r, j] - true[r, idx]) <= bound
+
+
+def test_topk_mips_quant_traced_n_valid():
+    """Quantized search keeps the stable-shape contract: several n_valid
+    values through one executable, padded rows never surface."""
+    D, N_pad, kk = 16, 96, 6
+    q = jax.random.normal(k(47), (5, D))
+    bank = jax.random.normal(k(48), (N_pad, D))
+    codes, scales = ref.quantize_rows_ref(bank)
+    for n_valid in (3, 17, 50, 96):
+        s, i = ops.topk_mips_quant(q, codes, scales, k=kk, n_valid=n_valid,
+                                   block_q=8, block_n=32)
+        sr, ir = ref.topk_mips_quant_ref(q, codes, scales, k=kk,
+                                         n_valid=n_valid)
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(ir))
+        ii = np.asarray(i)
+        assert ((ii < n_valid) | (ii == -1)).all()
+
+
+def test_topk_mips_quant_rejects_f32_bank():
+    q = jax.random.normal(k(49), (2, 8))
+    bank = jax.random.normal(k(50), (16, 8))
+    scales = jnp.ones((16,), jnp.float32)
+    with pytest.raises(TypeError, match="int8"):
+        ops.topk_mips_quant(q, bank, scales, k=4)
+
+
+@pytest.mark.parametrize("variant", ["plain", "masked", "quant",
+                                     "quant_masked"])
+def test_topk_mips_empty_bank_n_valid_zero_all_sentinels(variant):
+    """n_valid=0 (an index before its first append, or fully demoted):
+    every variant must return all -1 indices, never garbage rows."""
+    D, N, kk = 8, 32, 4
+    q = jax.random.normal(k(51), (3, D))
+    bank = jax.random.normal(k(52), (N, D))
+    codes, scales = ref.quantize_rows_ref(bank)
+    q_ns = jnp.zeros((3,), jnp.int32)
+    bank_ns = jnp.zeros((N,), jnp.int32)
+    if variant == "plain":
+        s, i = ops.topk_mips(q, bank, k=kk, n_valid=0, block_q=8, block_n=8)
+    elif variant == "masked":
+        s, i = ops.topk_mips_masked(q, bank, q_ns, bank_ns, k=kk, n_valid=0,
+                                    block_q=8, block_n=8)
+    elif variant == "quant":
+        s, i = ops.topk_mips_quant(q, codes, scales, k=kk, n_valid=0,
+                                   block_q=8, block_n=8)
+    else:
+        s, i = ops.topk_mips_quant_masked(q, codes, scales, q_ns, bank_ns,
+                                          k=kk, n_valid=0,
+                                          block_q=8, block_n=8)
+    assert (np.asarray(i) == -1).all()
+
+
+def test_quantize_rows_ref_roundtrip_error_bound():
+    """Per-element dequant error is bounded by scale/2; zero rows get
+    scale 0 and reconstruct exactly."""
+    rng = np.random.default_rng(0)
+    bank = rng.standard_normal((64, 32)).astype(np.float32)
+    bank[5] = 0.0
+    bank[9] *= 1e-6                         # tiny-norm row
+    bank[11] *= 1e4                         # huge-norm row
+    codes, scales = ref.quantize_rows_ref(bank)
+    codes, scales = np.asarray(codes), np.asarray(scales)
+    assert codes.dtype == np.int8
+    assert (np.abs(codes) <= 127).all()
+    recon = codes.astype(np.float32) * scales[:, None]
+    err = np.abs(recon - bank)
+    assert (err <= scales[:, None] / 2 + 1e-7).all()
+    assert scales[5] == 0.0 and (codes[5] == 0).all()
+    assert (recon[5] == 0).all()
+
+
+# ---------------------------------------------------------------------------
 # flash_attention
 # ---------------------------------------------------------------------------
 
