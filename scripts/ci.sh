@@ -43,6 +43,14 @@ if [[ "${FAST_ONLY:-0}" != "1" ]]; then
     echo "== BENCH_lifecycle.json =="
     cat BENCH_lifecycle.json
 
+    echo "== bench: kill-a-shard recovery (sharded WAL + follower restore) =="
+    # asserts the recovered service answers bit-identically to the live one
+    # after a shard's disk is lost and rebuilt from the follower's segments
+    JAX_PLATFORMS=cpu python benchmarks/shard_recovery_bench.py \
+        --seconds 3 --shards 2 --tenants 8 --json BENCH_shard_recovery.json
+    echo "== BENCH_shard_recovery.json =="
+    cat BENCH_shard_recovery.json
+
     echo "== bench: cross-client scheduler (closed-loop multi-client) =="
     # asserts the scheduled path >= 2x the per-call path at 8 clients
     JAX_PLATFORMS=cpu python benchmarks/scheduler_bench.py \

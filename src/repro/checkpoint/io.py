@@ -32,8 +32,11 @@ def save(path: str, tree: PyTree, *, atomic: bool = False,
     (tmp + fsync + rename + directory fsync — one audited implementation
     of the crash-durable write), so readers and crash recovery only ever
     see a complete checkpoint under `path`; it implies `fsync`.  Plain
-    `fsync=True` flushes an in-place write to stable storage.  The
-    lifecycle runtime's snapshot rotation uses `atomic=True`."""
+    `fsync=True` flushes an in-place write to stable storage AND fsyncs
+    the parent directory — a freshly created file whose direntry is not
+    flushed can vanish wholesale on power loss even though its own fd was
+    fsync'd.  The lifecycle runtime's snapshot rotation uses
+    `atomic=True`."""
     entries = {}
     def rec(p, leaf):
         arr = np.asarray(leaf)
@@ -50,11 +53,10 @@ def save(path: str, tree: PyTree, *, atomic: bool = False,
         from repro.checkpoint.wal import atomic_write_bytes
         atomic_write_bytes(path, blob)
         return len(blob)
-    with open(path, "wb") as f:
-        f.write(blob)
-        if fsync:
-            f.flush()
-            os.fsync(f.fileno())
+    from repro.checkpoint import faults
+    faults.active().write_file(path, blob, fsync=fsync)
+    if fsync:
+        faults.active().fsync_dir(os.path.dirname(os.path.abspath(path)))
     return len(blob)
 
 

@@ -39,6 +39,8 @@ from typing import Dict, Iterator, List, Optional, Tuple
 
 import msgpack
 
+from repro.checkpoint import faults
+
 SEGMENT_VERSION = 1
 MANIFEST_NAME = "MANIFEST.msgpack"
 _SEG_RE = re.compile(r"^wal-(\d{8})\.msgpack$")
@@ -47,27 +49,28 @@ _SNAP_RE = re.compile(r"^snapshot-(\d{8})\.msgpack$")
 
 def fsync_dir(path: str) -> None:
     """Flush a directory entry table (the rename durability point)."""
-    fd = os.open(path, os.O_RDONLY)
-    try:
-        os.fsync(fd)
-    finally:
-        os.close(fd)
+    faults.active().fsync_dir(path)
 
 
 def atomic_write_bytes(path: str, blob: bytes) -> None:
     """tmp + fsync + rename + dir-fsync: the file exists completely or not
-    at all, and survives power loss once this returns."""
+    at all, and survives power loss once this returns.  All three steps
+    route through `checkpoint.faults` so tests can crash between them."""
+    fs = faults.active()
     tmp = path + ".tmp"
-    with open(tmp, "wb") as f:
-        f.write(blob)
-        f.flush()
-        os.fsync(f.fileno())
-    os.replace(tmp, path)
-    fsync_dir(os.path.dirname(os.path.abspath(path)))
+    fs.write_file(tmp, blob, fsync=True)
+    fs.replace(tmp, path)
+    fs.fsync_dir(os.path.dirname(os.path.abspath(path)))
 
 
 class CorruptSegmentError(RuntimeError):
     """A WAL segment failed validation (bad version, seq, or checksum)."""
+
+
+# every field a segment envelope may carry; anything else means the
+# envelope bytes themselves were damaged (the CRC only covers the payload,
+# so a flipped bit in an envelope KEY would otherwise go unnoticed)
+_ENVELOPE_KEYS = frozenset({"version", "seq", "count", "crc", "payload"})
 
 
 class WriteAheadLog:
@@ -87,6 +90,12 @@ class WriteAheadLog:
         self._next_seq = max(tail, snaps) + 1
         # file seq replay last stopped at (None = clean); see quarantine_from
         self.replay_stopped_seq: Optional[int] = None
+        # called with the absolute path of every freshly sealed segment
+        # (segments are immutable once named, so "written" == "sealed");
+        # the replication shipper hangs off this to stream segments to a
+        # follower.  Must not raise — durability is the local fsync, the
+        # hook is best-effort propagation.
+        self.on_seal = None
 
     # -- paths -------------------------------------------------------------
     def _seg_path(self, seq: int) -> str:
@@ -139,6 +148,8 @@ class WriteAheadLog:
         }, use_bin_type=True)
         atomic_write_bytes(self._seg_path(seq), envelope)
         self._next_seq = seq + 1
+        if self.on_seal is not None:
+            self.on_seal(self._seg_path(seq))
         return seq
 
     def append_group(self, records: List[dict]) -> Tuple[int, int]:
@@ -169,6 +180,8 @@ class WriteAheadLog:
         }, use_bin_type=True)
         atomic_write_bytes(self._seg_path(first), envelope)
         self._next_seq = first + len(records)
+        if self.on_seal is not None:
+            self.on_seal(self._seg_path(first))
         return first, first + len(records) - 1
 
     # -- read / replay -----------------------------------------------------
@@ -207,7 +220,7 @@ class WriteAheadLog:
         for seq in self.segment_seqs():
             if seq >= file_seq:
                 path = self._seg_path(seq)
-                os.replace(path, path + ".corrupt")
+                faults.active().replace(path, path + ".corrupt")
                 moved.append(os.path.basename(path) + ".corrupt")
         if moved:
             fsync_dir(self.dir)
@@ -236,6 +249,10 @@ class WriteAheadLog:
             payload = env["payload"]
         except Exception as e:
             raise CorruptSegmentError(f"segment {seq}: undecodable ({e})")
+        extra = set(env) - _ENVELOPE_KEYS
+        if extra:
+            raise CorruptSegmentError(
+                f"segment {seq}: unknown envelope fields {sorted(extra)}")
         if version != SEGMENT_VERSION:
             raise CorruptSegmentError(
                 f"segment {seq}: version {version} != {SEGMENT_VERSION}")
@@ -246,11 +263,18 @@ class WriteAheadLog:
             raise CorruptSegmentError(f"segment {seq}: checksum mismatch")
         count = int(env.get("count", 1))
         decoded = msgpack.unpackb(payload, raw=False)
-        if count > 1 and (not isinstance(decoded, list)
-                          or len(decoded) != count):
+        if count > 1:
+            if not isinstance(decoded, list) or len(decoded) != count:
+                raise CorruptSegmentError(
+                    f"segment {seq}: group claims {count} records, payload "
+                    f"holds {len(decoded) if isinstance(decoded, list) else 1}")
+        elif not isinstance(decoded, dict):
+            # records are dicts by contract; a list here means a group's
+            # count field was corrupted down to 1 — the payload CRC cannot
+            # catch that (the payload is intact, the envelope is not)
             raise CorruptSegmentError(
-                f"segment {seq}: group claims {count} records, payload "
-                f"holds {len(decoded) if isinstance(decoded, list) else 1}")
+                f"segment {seq}: single-record payload decodes to "
+                f"{type(decoded).__name__}, not a record")
         return count, decoded
 
     def read_segment(self, seq: int) -> dict:
@@ -326,14 +350,14 @@ class WriteAheadLog:
         self.write_manifest(keep, {s: births.get(s, now) for s, _ in keep})
         dropped_snaps = 0
         for through, path in snaps[:-retain] if retain else []:
-            os.unlink(path)
+            faults.active().unlink(path)
             dropped_snaps += 1
         # only segments every retained snapshot already covers may go
         oldest_covered = min(s for s, _ in keep)
         dropped_segs = 0
         for seq in self.segment_seqs():
             if seq <= oldest_covered:
-                os.unlink(self._seg_path(seq))
+                faults.active().unlink(self._seg_path(seq))
                 dropped_segs += 1
         fsync_dir(self.dir)
         return {"retained_snapshots": len(keep),

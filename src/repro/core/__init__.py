@@ -4,7 +4,8 @@
 from repro.core.admission import (PRIORITY_HIGH, PRIORITY_LOW,  # noqa: F401
                                   PRIORITY_NORMAL, AdmissionController,
                                   AdmissionError, AdmissionPolicy,
-                                  TenantPolicy)
+                                  TenantPolicy, admission_policy_from_json,
+                                  tenant_policy_from_json)
 from repro.core.api import (CompactRequest, EvictRequest,  # noqa: F401
                             MemoryRequest, MemoryResponse, RawRetrieval,
                             RecordRequest, RetrievalPlan, RetrieveRequest)
@@ -14,8 +15,9 @@ from repro.core.lifecycle import (BackpressureError, LifecyclePolicy,  # noqa: F
                                   LifecycleRuntime)
 from repro.core.memory import ANSWER_PROMPT, MemoriMemory, RetrievedContext  # noqa: F401
 from repro.core.scheduler import MemoryScheduler  # noqa: F401
-from repro.core.sdk import MemoriClient  # noqa: F401
+from repro.core.sdk import HttpMemory, MemoriClient, RetryPolicy  # noqa: F401
 from repro.core.service import MemoryService, NamespaceView  # noqa: F401
+from repro.core.shards import ShardedBank  # noqa: F401
 from repro.core.store import (MemoryStore, StoreInvariantError,  # noqa: F401
                               TenantState)
 from repro.core.summaries import Summary, SummaryStore  # noqa: F401

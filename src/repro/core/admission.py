@@ -157,7 +157,8 @@ class AdmissionController:
         self._tenants: Dict[str, _TenantState] = {}   # insertion-ordered
         self._rr_offset = 0
         self._total = 0
-        self.counters = {"admitted": 0, "rate_limited": 0, "shed": 0}
+        self.counters = {"admitted": 0, "rate_limited": 0, "shed": 0,
+                         "policy_reloads": 0}
 
     def _state(self, tenant: str) -> _TenantState:
         st = self._tenants.get(tenant)
@@ -165,6 +166,27 @@ class AdmissionController:
             st = _TenantState(self.policy.for_tenant(tenant), self.clock())
             self._tenants[tenant] = st
         return st
+
+    def set_policy(self, policy: AdmissionPolicy) -> None:
+        """Swap the mounted policy in place — the dynamic-reload path (the
+        frontend's authenticated admin endpoint, via
+        `MemoryScheduler.set_admission_policy`).  Existing tenant states
+        keep their queues and counters but re-bind to the new policy's
+        contract: each bucket refills under the OLD rate first (tokens
+        earned are kept), then clamps to the new burst so a shrunken limit
+        takes effect immediately instead of after the old burst drains.
+        Caller must hold whatever lock serializes admit/select (the
+        scheduler's condition lock)."""
+        if not isinstance(policy, AdmissionPolicy):
+            raise TypeError(f"set_policy takes an AdmissionPolicy, got "
+                            f"{type(policy).__name__}")
+        now = self.clock()
+        self.policy = policy
+        for name, st in self._tenants.items():
+            st.refill(now)               # settle earnings under the old rate
+            st.policy = policy.for_tenant(name)
+            st.tokens = min(st.tokens, float(st.policy.burst))
+        self.counters["policy_reloads"] += 1
 
     # -- admit --------------------------------------------------------------
     def admit_batch(self, counts: Sequence[Tuple[str, int]]) -> None:
@@ -333,6 +355,55 @@ class AdmissionController:
                    "priority": st.policy.priority}
             for name, st in self._tenants.items()}
         return dict(self.counters, queued=self._total, tenants=per_tenant)
+
+
+# -- wire codec (the frontend's policy-reload endpoint) ----------------------
+def tenant_policy_from_json(obj: dict) -> TenantPolicy:
+    """One JSON object -> TenantPolicy, validated by the dataclass's own
+    __post_init__ checks.  Unknown keys are rejected — a typo'd knob in an
+    operator's reload payload must fail loudly, not silently no-op."""
+    if not isinstance(obj, dict):
+        raise ValueError("tenant policy must be a JSON object")
+    known = {"weight", "priority", "rate", "burst", "max_queued"}
+    unknown = sorted(set(obj) - known)
+    if unknown:
+        raise ValueError(f"unknown tenant policy keys {unknown}; "
+                         f"known: {sorted(known)}")
+    return TenantPolicy(
+        weight=float(obj.get("weight", 1.0)),
+        priority=int(obj.get("priority", PRIORITY_NORMAL)),
+        rate=None if obj.get("rate") is None else float(obj["rate"]),
+        burst=int(obj.get("burst", 32)),
+        max_queued=(None if obj.get("max_queued") is None
+                    else int(obj["max_queued"])))
+
+
+def admission_policy_from_json(obj: dict) -> AdmissionPolicy:
+    """The reload endpoint's body -> AdmissionPolicy."""
+    if not isinstance(obj, dict):
+        raise ValueError("admission policy must be a JSON object")
+    known = {"default", "tenants", "max_queued_global", "shed_retry_after_s",
+             "share_window_s"}
+    unknown = sorted(set(obj) - known)
+    if unknown:
+        raise ValueError(f"unknown admission policy keys {unknown}; "
+                         f"known: {sorted(known)}")
+    tenants = obj.get("tenants", {})
+    if not isinstance(tenants, dict):
+        raise ValueError("'tenants' must be an object of per-tenant "
+                         "policies")
+    kw: dict = {
+        "default": tenant_policy_from_json(obj.get("default", {})),
+        "tenants": {str(k): tenant_policy_from_json(v)
+                    for k, v in tenants.items()},
+        "max_queued_global": (None if obj.get("max_queued_global") is None
+                              else int(obj["max_queued_global"])),
+    }
+    if obj.get("shed_retry_after_s") is not None:
+        kw["shed_retry_after_s"] = float(obj["shed_retry_after_s"])
+    if obj.get("share_window_s") is not None:
+        kw["share_window_s"] = float(obj["share_window_s"])
+    return AdmissionPolicy(**kw)
 
 
 def tenant_of(request) -> str:

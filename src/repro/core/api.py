@@ -175,6 +175,9 @@ class RawRetrieval:
     row_ids: List[int]
     triple_ids: List[int]
     scores: List[float]
+    # True when the owning shard was down at retrieval time (empty by
+    # design — the batch's surviving requests answered normally)
+    degraded: bool = False
 
 
 @dataclasses.dataclass
@@ -190,6 +193,7 @@ class MemoryResponse:
     service_s: float = 0.0            # execution time inside the tick
     batch_size: int = 1               # requests sharing the device launch
     token_count: Optional[int] = None  # retrieves with a budget stage
+    degraded: bool = False            # served with the owning shard down
 
     @property
     def ok(self) -> bool:
@@ -256,7 +260,8 @@ def payload_to_json(payload: Any) -> Any:
     if isinstance(payload, RawRetrieval):
         return {"kind": "raw_retrieval", "row_ids": list(payload.row_ids),
                 "triple_ids": list(payload.triple_ids),
-                "scores": list(payload.scores)}
+                "scores": list(payload.scores),
+                "degraded": bool(payload.degraded)}
     # RetrievedContext (duck-typed: core.memory imports this module's
     # sibling types, so importing it here would cycle)
     if hasattr(payload, "triples") and hasattr(payload, "text"):
@@ -264,6 +269,7 @@ def payload_to_json(payload: Any) -> Any:
             "kind": "retrieved_context",
             "text": payload.text,
             "token_count": payload.token_count,
+            "degraded": bool(getattr(payload, "degraded", False)),
             "triples": [dataclasses.asdict(t) for t in payload.triples],
             "summaries": [dataclasses.asdict(s) for s in payload.summaries],
         }
@@ -282,6 +288,7 @@ def response_to_json(resp: "MemoryResponse") -> dict:
         "service_s": resp.service_s,
         "batch_size": resp.batch_size,
         "token_count": resp.token_count,
+        "degraded": resp.degraded,
     }
 
 

@@ -42,7 +42,8 @@ import time
 import warnings
 from typing import Optional, Sequence
 
-from repro.checkpoint.wal import WriteAheadLog
+from repro.checkpoint.replication import (DirectorySink, SegmentShipper,
+                                          open_wal)
 from repro.core.extraction import Extractor, Message
 from repro.core.store import MemoryStore
 from repro.core.tiering import TierPolicy
@@ -95,7 +96,16 @@ class LifecycleRuntime:
                  start: bool = True, _recovered: bool = False):
         self.store = store
         self.policy = policy or LifecyclePolicy()
-        self.wal = WriteAheadLog(data_dir) if data_dir else None
+        # a sharded store journals through a ShardedWal (per-shard logs +
+        # cross-shard commit records); unsharded stores keep the plain log.
+        # Autodetect covers mounting over a directory whose layout is known
+        # only from disk.
+        self.wal = (open_wal(data_dir,
+                             shards=(store.shards
+                                     if getattr(store, "shards", 1) > 1
+                                     else None))
+                    if data_dir else None)
+        self.shipper: Optional[SegmentShipper] = None
         self.lock = threading.RLock()
         self._can_enqueue = threading.Condition(self.lock)
         self._stop = threading.Event()
@@ -165,19 +175,24 @@ class LifecycleRuntime:
                 extractor: Optional[Extractor] = None, *,
                 policy: Optional[LifecyclePolicy] = None, dim: int = 256,
                 use_kernel: bool = True, tokenizer=None,
-                start: bool = True) -> "LifecycleRuntime":
+                start: bool = True, shards: Optional[int] = None,
+                mesh=None) -> "LifecycleRuntime":
         """Rebuild a store from a durable directory: newest restorable
         snapshot generation (older generations are fallbacks if the newest
         fails to load) + ordered replay of every valid WAL segment past its
-        coverage, through the store's own commit path."""
-        wal = WriteAheadLog(data_dir)
+        coverage, through the store's own commit path.  `shards=None`
+        autodetects the on-disk WAL layout, so a sharded directory recovers
+        into a sharded store without the caller restating the topology."""
+        wal = open_wal(data_dir, shards=shards)
+        n_shards = getattr(wal, "n_shards", 1)
         store, after = None, 0
         for wal_through, path in reversed(wal.snapshots()):
             try:
                 store = MemoryStore.restore(path, embedder,
                                             extractor=extractor,
                                             use_kernel=use_kernel,
-                                            tokenizer=tokenizer)
+                                            tokenizer=tokenizer,
+                                            shards=n_shards, mesh=mesh)
                 after = wal_through
                 break
             except Exception as e:           # fall back a generation
@@ -186,7 +201,8 @@ class LifecycleRuntime:
                               stacklevel=2)
         if store is None:
             store = MemoryStore(embedder, extractor, dim=dim,
-                                use_kernel=use_kernel, tokenizer=tokenizer)
+                                use_kernel=use_kernel, tokenizer=tokenizer,
+                                shards=n_shards, mesh=mesh)
         poison_file = None
         for seq, record in wal.replay_records(after_seq=after):
             try:
@@ -217,6 +233,25 @@ class LifecycleRuntime:
         if dead_from is not None:
             rt.rotate()
         return rt
+
+    # -- replication --------------------------------------------------------
+    def attach_follower(self, sink, mode: str = "sync") -> SegmentShipper:
+        """Stream every sealed WAL segment (coordinator and shard logs
+        alike) to `sink` — a directory path or any object with
+        put/has/list — and backfill whatever history the sink is missing.
+        Local fsync stays the durability point; the follower is async
+        replication whose lag is the disaster-recovery RPO.  Returns the
+        shipper (counters: shipped/failed/queued)."""
+        if self.wal is None:
+            raise RuntimeError("attach_follower needs a durable data_dir")
+        if isinstance(sink, str):
+            sink = DirectorySink(sink)
+        shipper = SegmentShipper(self.wal.dir, sink, mode=mode)
+        with self.lock:
+            self.wal.on_seal = shipper
+            self.shipper = shipper
+        shipper.ship_existing()
+        return shipper
 
     # -- write path with backpressure --------------------------------------
     def enqueue(self, namespace: str, session_id: str,
@@ -425,6 +460,8 @@ class LifecycleRuntime:
             if self.store.wal_sink is not None and self.wal is not None:
                 self.store.wal_sink = None
             self.store.on_flush_commit = None
+        if self.shipper is not None:
+            self.shipper.close()         # async mode: drain the queue
 
     def __enter__(self) -> "LifecycleRuntime":
         return self
@@ -445,4 +482,6 @@ class LifecycleRuntime:
             "lifecycle": dict(self.counters,
                               daemon_running=self.running,
                               durable=self.wal is not None),
+            "replication": (dict(self.shipper.counters)
+                            if self.shipper is not None else None),
         }

@@ -25,6 +25,9 @@ class RetrievedContext:
     summaries: List[Summary]
     text: str
     token_count: int
+    # True when the owning shard was down at retrieval time: the result
+    # is empty/partial by design, not an error (see core/shards.py)
+    degraded: bool = False
 
 
 ANSWER_PROMPT = """You are an intelligent memory assistant tasked with retrieving

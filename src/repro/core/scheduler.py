@@ -161,6 +161,14 @@ class MemoryScheduler:
             self._cv.notify_all()
         return [p.future for p in pend]
 
+    def set_admission_policy(self, policy: AdmissionPolicy) -> None:
+        """Swap the mounted admission policy without a restart (the
+        frontend's authenticated reload endpoint lands here).  Queued
+        requests are untouched; the next submit/select sees the new
+        limits.  Thread-safe: swaps under the same lock submit holds."""
+        with self._cv:
+            self.admission.set_policy(policy)
+
     def can_submit(self) -> bool:
         """True when the sync service wrappers should route through this
         scheduler: it is accepting work, someone will run ticks, and the
@@ -257,7 +265,9 @@ class MemoryScheduler:
                                     payload=pay, op="retrieve",
                                     service_s=dt, batch_size=len(run),
                                     token_count=getattr(pay, "token_count",
-                                                        None)))
+                                                        None),
+                                    degraded=getattr(pay, "degraded",
+                                                     False)))
                         i += len(run)
                         continue
                     t0 = time.monotonic()

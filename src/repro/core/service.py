@@ -105,7 +105,8 @@ class MemoryService:
                  data_dir: Optional[str] = None,
                  runtime: Optional[LifecycleRuntime] = None,
                  plan: Optional[RetrievalPlan] = None,
-                 quantize: str = "none", rescore: int = 4):
+                 quantize: str = "none", rescore: int = 4,
+                 shards: int = 1, mesh=None):
         if store is None and runtime is not None:
             store = runtime.store
         if store is None:
@@ -113,7 +114,8 @@ class MemoryService:
                 raise ValueError("MemoryService needs an embedder or a store")
             store = MemoryStore(embedder, extractor, dim=dim,
                                 use_kernel=use_kernel, tokenizer=tokenizer,
-                                quantize=quantize, rescore=rescore)
+                                quantize=quantize, rescore=rescore,
+                                shards=shards, mesh=mesh)
         self.store = store
         self.embedder = store.embedder
         self.extractor = store.extractor
@@ -165,7 +167,9 @@ class MemoryService:
             path, embedder, extractor=extractor, use_kernel=use_kernel,
             tokenizer=tokenizer,
             quantize=service_kwargs.pop("quantize", "none"),
-            rescore=service_kwargs.pop("rescore", 4))
+            rescore=service_kwargs.pop("rescore", 4),
+            shards=service_kwargs.pop("shards", 1),
+            mesh=service_kwargs.pop("mesh", None))
         return cls(store=store, **service_kwargs)
 
     @classmethod
@@ -174,17 +178,20 @@ class MemoryService:
                 policy: Optional[LifecyclePolicy] = None,
                 use_kernel: bool = True, dim: int = 256,
                 tokenizer: HashTokenizer | None = None,
+                shards: Optional[int] = None, mesh=None,
                 **service_kwargs) -> "MemoryService":
         """Rebuild a service from a lifecycle runtime's durable directory:
         newest restorable snapshot + ordered WAL replay.  The recovered
         service answers `retrieve_batch` bit-identically to the pre-crash
         one up to the last durable flush, and keeps journaling to the same
         directory.  `dim` matters only when the directory holds no
-        snapshot yet (the fresh replay store must match the embedder)."""
+        snapshot yet (the fresh replay store must match the embedder).
+        `shards=None` autodetects the sharded WAL layout on disk."""
         rt = LifecycleRuntime.recover(data_dir, embedder,
                                       extractor=extractor, policy=policy,
                                       use_kernel=use_kernel, dim=dim,
-                                      tokenizer=tokenizer)
+                                      tokenizer=tokenizer, shards=shards,
+                                      mesh=mesh)
         return cls(runtime=rt, **service_kwargs)
 
     def snapshot(self, path: str) -> int:
@@ -377,6 +384,17 @@ class MemoryService:
                 for t in tenants:
                     if t is not None:
                         tiers.note_retrieve(t.ns_id)
+            # graceful degradation: a request whose owning placement shard
+            # is down answers empty with degraded=True — BOTH its rankings
+            # are masked below, so the surviving requests in the batch are
+            # bit-identical to a batch that never contained it
+            sharded = self.store.sharded
+            if sharded is not None and sharded.down:
+                downed = [t is not None
+                          and sharded.shard_of(t.ns_id) in sharded.down
+                          for t in tenants]
+            else:
+                downed = [False] * len(reqs)
             B = len(reqs)
             # fuse at the pow2 ceiling of the largest requested k: k is a
             # jit-static arg of the fusion, so bucketing it bounds the
@@ -400,8 +418,16 @@ class MemoryService:
                     qv = np.asarray(qvecs, np.float32)
                     qmat = np.zeros((Bp, qv.shape[1]), np.float32)
                     qmat[dense_rows] = qv
-                    _, dense_ids = vindex.search_batch(qmat, q_ns,
-                                                       k=self.pool)
+                    if sharded is not None:
+                        # shard-wise placement: one launch through the
+                        # namespace-masked sharded_topk (local top-k per
+                        # shard, gathered + re-ranked globally); ids come
+                        # back already in global-row space
+                        _, dense_ids = self.store.sharded_search(
+                            qmat, q_ns, k=self.pool)
+                    else:
+                        _, dense_ids = vindex.search_batch(qmat, q_ns,
+                                                           k=self.pool)
                     if tiers is not None:
                         # a demoted namespace's rows are absent from the
                         # device bank: answer those requests from the
@@ -420,7 +446,9 @@ class MemoryService:
                             for i in fb:
                                 tiers.note_host_fallback(tenants[i].ns_id)
                     dense_ids = self._mask_ranking(
-                        dense_ids, [r.dense for r in res], Bp)
+                        dense_ids,
+                        [r.dense and not d for r, d in zip(res, downed)],
+                        Bp)
                     rankings.append(dense_ids)
                     weight_cols.append(
                         [r.dense_weight for r in res]
@@ -430,7 +458,9 @@ class MemoryService:
                         [r.query for r in reqs] + [""] * (Bp - B),
                         k=self.pool, namespaces=ns_pad)
                     sparse_ids = self._mask_ranking(
-                        sparse_ids, [r.sparse for r in res], Bp)
+                        sparse_ids,
+                        [r.sparse and not d for r, d in zip(res, downed)],
+                        Bp)
                     rankings.append(sparse_ids)
                     weight_cols.append(
                         [r.sparse_weight for r in res]
@@ -470,12 +500,14 @@ class MemoryService:
                     text = MemoriMemory.render(ctx.triples, ctx.summaries)
                     out.append(RetrievedContext(ctx.triples, ctx.summaries,
                                                 text,
-                                                self.tokenizer.count(text)))
+                                                self.tokenizer.count(text),
+                                                degraded=downed[r]))
                 else:
                     rows = [int(g) for g in ids if g >= 0]
                     out.append(RawRetrieval(
                         rows, [self.store.row_tid(g) for g in rows],
-                        [float(s) for g, s in zip(ids, scs) if g >= 0]))
+                        [float(s) for g, s in zip(ids, scs) if g >= 0],
+                        degraded=downed[r]))
             return out
 
     def _resolve(self, req: RetrieveRequest, plan: RetrievalPlan) -> _Resolved:
@@ -524,6 +556,30 @@ class MemoryService:
         (subject, predicate) key; the older versions leave the indices)."""
         with self._guard():
             return self.store.evict_superseded(namespace)
+
+    # -- shard lifecycle ---------------------------------------------------
+    def set_shard_down(self, shard: int) -> None:
+        """Mark one placement shard unavailable: its device label slab goes
+        to -1 (its rows stop matching any query) and requests owned by it
+        answer empty with `degraded=True` while the rest of the batch
+        answers normally — the batch never fails wholesale."""
+        with self._guard():
+            self.store.shard_down(shard)
+
+    def set_shard_up(self, shard: int) -> None:
+        """Bring a recovered shard back: restore its device labels from the
+        host mirror and stop degrading its tenants' responses."""
+        with self._guard():
+            self.store.shard_up(shard)
+
+    def attach_follower(self, sink, mode: str = "sync"):
+        """Stream every sealed WAL segment to `sink` (a directory path or
+        any object with put/has/list — see checkpoint/replication.py), so
+        recovery survives losing this host's disk.  Returns the shipper."""
+        if self.runtime is None:
+            raise RuntimeError("attach_follower needs a lifecycle runtime "
+                               "(construct the service with data_dir/runtime)")
+        return self.runtime.attach_follower(sink, mode=mode)
 
     # -- stats ----------------------------------------------------------------------
     def stats(self) -> dict:

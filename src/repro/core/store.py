@@ -85,18 +85,37 @@ class MemoryStore:
     def __init__(self, embedder, extractor: Optional[Extractor] = None,
                  dim: int = 256, use_kernel: bool = True,
                  tokenizer: HashTokenizer | None = None,
-                 quantize: str = "none", rescore: int = 4):
+                 quantize: str = "none", rescore: int = 4,
+                 shards: int = 1, mesh=None):
         self.embedder = embedder
         self.extractor = extractor or RuleExtractor()
         self.tokenizer = tokenizer or default_tokenizer()
         self.dim = dim
         self.use_kernel = use_kernel
+        if shards < 1:
+            raise ValueError(f"shards must be >= 1, got {shards}")
+        if shards > 1 and quantize != "none":
+            raise ValueError(
+                "sharded placement and the quantized device bank are "
+                "mutually exclusive (the shard slabs hold f32 rows)")
+        self.shards = int(shards)
+        self.mesh = mesh
         # quantize="int8" keeps the f32 host mirror as ground truth
         # (snapshots/WAL bit-identical) but holds the DEVICE bank as int8
         # codes + per-row scales searched by the fused dequant kernel with
         # exact f32 rescore of the top rescore*k candidates
         self.vindex = VectorIndex(dim=dim, use_kernel=use_kernel,
                                   quantize=quantize, rescore=rescore)
+        # shards > 1 mounts a shard-major device bank (core/shards.py):
+        # namespace-affine placement over a device mesh, searched by the
+        # namespace-masked sharded_topk.  The VectorIndex host mirror stays
+        # the ground truth for WAL/snapshot/compaction either way.
+        if self.shards > 1:
+            from repro.core.shards import ShardedBank
+            self.sharded: Optional[object] = ShardedBank(
+                dim, self.shards, mesh=mesh, use_kernel=use_kernel)
+        else:
+            self.sharded = None
         self.bm25 = BM25Index(tokenizer=self.tokenizer)
         # hot/warm tier manager (core/tiering.py) — attach_tiers() mounts
         # one; when None every row stays device-resident
@@ -164,6 +183,9 @@ class MemoryStore:
         from repro.core.tiering import TierManager
         if self.tiers is not None:
             raise ValueError("a TierManager is already attached")
+        if self.sharded is not None:
+            raise ValueError(
+                "hot/warm tiering is not supported on a sharded bank")
         kwargs = {} if clock is None else {"clock": clock}
         self.tiers = TierManager(self.vindex, policy=policy, **kwargs)
         return self.tiers
@@ -208,13 +230,25 @@ class MemoryStore:
                 triples, summary = self.extractor.extract(
                     p.conversation_id, p.session_id, p.messages)
                 batch.append((p, triples, summary))
+            if self.sharded is not None:
+                # pin namespace ids in ENQUEUE order before grouping —
+                # replay sees sessions grouped by shard, so the record must
+                # carry the live assignment or recovered ids would drift
+                for p, _, _ in batch:
+                    self._ns_ids.setdefault(p.namespace, len(self._ns_ids))
+                # stable sort: shard-contiguous parts, enqueue order within
+                batch = sorted(
+                    batch, key=lambda b:
+                    self._ns_ids[b[0].namespace] % self.shards)
             flat = [tr for _, triples, _ in batch for tr in triples]
             vecs = self.embedder.embed_texts(                # ONE embed call
                 [tr.text() for tr in flat]) if flat else None
             sessions = [(p.namespace, summary, triples)
                         for p, triples, summary in batch]
             if self.wal_sink is not None:    # durability point: WAL first
-                self.wal_sink(self._flush_record(sessions, vecs))
+                self.wal_sink(self._sharded_flush_record(sessions, vecs)
+                              if self.sharded is not None
+                              else self._flush_record(sessions, vecs))
         except BaseException:
             # restore the queue (ahead of anything enqueued concurrently)
             self._pending = pending + self._pending
@@ -253,6 +287,9 @@ class MemoryStore:
             tid = t.triples.add(tr)
             t.rows.append(int(row))
             self._row_tid.append(tid)
+        if self.sharded is not None:     # mirror into the shard layout
+            self.sharded.append(rows, np.asarray(vecs, np.float32),
+                                [t.ns_id for t in tenants])
 
     # -- incremental persistence (WAL records) ------------------------------
     def _flush_record(self, sessions, vecs) -> dict:
@@ -275,6 +312,44 @@ class MemoryStore:
                      if n_rows else b""),
         }
 
+    def _sharded_flush_record(self, sessions, vecs) -> dict:
+        """Sharded flush record: the (shard-grouped) sessions split into
+        per-shard parts — each part a plain flush record of that shard's
+        contiguous session run — plus the namespace-id table.  The WAL
+        layer (`checkpoint/replication.ShardedWal`) lands each part in its
+        shard's own log and journals one cross-shard commit record; the
+        ns_ids table rides along because ids were assigned in enqueue
+        order, which the grouped parts alone cannot reconstruct."""
+        parts = []
+        cursor = 0
+        by_shard: Dict[int, list] = {}
+        for ns, summary, triples in sessions:
+            s = self._ns_ids[ns] % self.shards
+            by_shard.setdefault(s, []).append((ns, summary, triples))
+        for s in sorted(by_shard):       # ascending shard == grouped order
+            group = by_shard[s]
+            cnt = sum(len(triples) for _, _, triples in group)
+            part_vecs = (np.asarray(vecs, np.float32)[cursor: cursor + cnt]
+                         if cnt else None)
+            cursor += cnt
+            parts.append([s, self._flush_record(group, part_vecs)])
+        return {"op": "sharded_flush",
+                "ns_ids": {ns: int(i) for ns, i in self._ns_ids.items()},
+                "parts": parts}
+
+    def _apply_flush_record(self, record: dict) -> None:
+        sessions = [
+            (s["namespace"], Summary(**s["summary"]),
+             [Triple(**td) for td in s["triples"]])
+            for s in record["sessions"]]
+        n, dim = int(record["n_rows"]), int(record["dim"])
+        if dim != self.dim:
+            raise StoreInvariantError(
+                f"WAL flush record dim {dim} != store dim {self.dim}")
+        vecs = (np.frombuffer(record["vecs"], "<f4").reshape(n, dim)
+                if n else None)
+        self._apply_flush(sessions, vecs)
+
     def apply_wal(self, record: dict) -> None:
         """Replay one WAL record through the same commit code the live
         mutation used.  Only valid on a store whose `wal_sink` is detached
@@ -285,17 +360,18 @@ class MemoryStore:
                 "records being replayed")
         op = record["op"]
         if op == "flush":
-            sessions = [
-                (s["namespace"], Summary(**s["summary"]),
-                 [Triple(**td) for td in s["triples"]])
-                for s in record["sessions"]]
-            n, dim = int(record["n_rows"]), int(record["dim"])
-            if dim != self.dim:
-                raise StoreInvariantError(
-                    f"WAL flush record dim {dim} != store dim {self.dim}")
-            vecs = (np.frombuffer(record["vecs"], "<f4").reshape(n, dim)
-                    if n else None)
-            self._apply_flush(sessions, vecs)
+            self._apply_flush_record(record)
+        elif op == "sharded_flush":
+            # pin the live run's namespace-id assignment first: ids were
+            # handed out in enqueue order, the parts arrive shard-grouped
+            for ns, nid in record.get("ns_ids", {}).items():
+                got = self._ns_ids.setdefault(str(ns), int(nid))
+                if got != int(nid):
+                    raise StoreInvariantError(
+                        f"replayed namespace id for {ns!r} is {nid}, "
+                        f"store already assigned {got}")
+            for _shard, part in record["parts"]:
+                self._apply_flush_record(part)
         elif op == "evict_ns":
             self.evict_namespace(record["namespace"])
         elif op == "evict_superseded":
@@ -332,6 +408,8 @@ class MemoryStore:
                 if tid not in t.evicted and row >= 0]
         self.vindex.delete(live)
         self.bm25.remove(live)
+        if self.sharded is not None:
+            self.sharded.delete(live)
         return len(live)
 
     def evict_superseded(self, namespace: str) -> int:
@@ -348,6 +426,8 @@ class MemoryStore:
         rows = [t.rows[tid] for tid in fresh]
         self.vindex.delete([r for r in rows if r >= 0])
         self.bm25.remove([r for r in rows if r >= 0])
+        if self.sharded is not None:
+            self.sharded.delete([r for r in rows if r >= 0])
         t.evicted.update(fresh)
         return len(fresh)
 
@@ -372,6 +452,8 @@ class MemoryStore:
         self._row_tid = [tid for tid, k in zip(self._row_tid, keep) if k]
         for t in self._tenants.values():
             t.rows = [int(old_to_new[r]) if r >= 0 else -1 for r in t.rows]
+        if self.sharded is not None:     # global row ids moved wholesale
+            self.sharded.invalidate()
         return {"rows_before": int(before), "rows_after": int(self.vindex.n),
                 "dropped": int(before - self.vindex.n)}
 
@@ -428,12 +510,14 @@ class MemoryStore:
                 extractor: Optional[Extractor] = None,
                 use_kernel: bool = True,
                 tokenizer: HashTokenizer | None = None,
-                quantize: str = "none", rescore: int = 4) -> "MemoryStore":
+                quantize: str = "none", rescore: int = 4,
+                shards: int = 1, mesh=None) -> "MemoryStore":
         """Reconstruct a store from `snapshot(path)`.  The result answers
         retrieval bit-identically to the store that wrote the snapshot
         (same bank bytes, same BM25 arrays, same triple/summary text).
-        `quantize`/`rescore` pick the restored index's device residency
-        mode — the snapshot itself is always full-precision."""
+        `quantize`/`rescore`/`shards`/`mesh` pick the restored index's
+        device residency mode — the snapshot itself is always
+        full-precision and placement-agnostic."""
         arrays = ckpt_io.load_raw(path)
         meta = msgpack.unpackb(arrays["meta"].tobytes(), raw=False)
         if meta["version"] != SNAPSHOT_VERSION:
@@ -441,7 +525,8 @@ class MemoryStore:
                 f"snapshot version {meta['version']} != {SNAPSHOT_VERSION}")
         store = cls(embedder, extractor, dim=int(meta["dim"]),
                     use_kernel=use_kernel, tokenizer=tokenizer,
-                    quantize=quantize, rescore=rescore)
+                    quantize=quantize, rescore=rescore,
+                    shards=shards, mesh=mesh)
         store.vindex.load_rows(arrays["bank"], arrays["bank_alive"],
                                ns=arrays["row_ns"])
         bm = meta["bm25"]
@@ -467,6 +552,42 @@ class MemoryStore:
                 f"({len(store.bm25)}) and row tables "
                 f"({len(store._row_tid)}) disagree")
         return store
+
+    # -- sharded retrieval --------------------------------------------------
+    def sharded_search(self, queries, q_ns, k: int):
+        """Namespace-masked top-k over the shard-major device bank: one
+        launch, returns (scores (Q,k) device f32, rows (Q,k) host i32
+        global ids).  Rebuilds the shard layout lazily when stale (first
+        search, after compaction/restore)."""
+        if self.sharded is None:
+            raise StoreInvariantError("store was built with shards=1")
+        if self.sharded.stale:
+            self.sharded.rebuild(self.vindex)
+        return self.sharded.search(queries, q_ns, k)
+
+    def shard_of_namespace(self, namespace: str) -> Optional[int]:
+        """Which shard owns a namespace's rows (None if unknown tenant or
+        unsharded)."""
+        if self.sharded is None:
+            return None
+        t = self._tenants.get(namespace)
+        return None if t is None else t.ns_id % self.shards
+
+    def shard_down(self, shard: int) -> None:
+        """Take one shard out of retrieval (graceful degradation: surviving
+        shards keep answering, the service stamps affected responses
+        `degraded`)."""
+        if self.sharded is None:
+            raise StoreInvariantError("store was built with shards=1")
+        self.sharded.mark_down(shard)
+
+    def shard_up(self, shard: int) -> None:
+        if self.sharded is None:
+            raise StoreInvariantError("store was built with shards=1")
+        self.sharded.mark_up(shard)
+
+    def down_shards(self) -> List[int]:
+        return sorted(self.sharded.down) if self.sharded is not None else []
 
     # -- stats -------------------------------------------------------------
     def stats(self) -> dict:
@@ -500,4 +621,6 @@ class MemoryStore:
         }
         if self.tiers is not None:
             out["tiering"] = self.tiers.stats()
+        if self.sharded is not None:
+            out["shards"] = self.sharded.stats()
         return out

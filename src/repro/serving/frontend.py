@@ -51,7 +51,7 @@ from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Dict, List, Mapping, Optional, Tuple
 
 from concurrent.futures import TimeoutError as FutureTimeoutError
-from repro.core.admission import AdmissionError
+from repro.core.admission import AdmissionError, admission_policy_from_json
 from repro.core.api import (CompactRequest, EvictRequest, MemoryResponse,
                             RecordRequest, RetrieveRequest,
                             record_request_from_json, response_to_json,
@@ -127,16 +127,25 @@ class MemoryFrontend:
 
     def __init__(self, service, api_keys: Mapping[str, str],
                  host: str = "127.0.0.1", port: int = 0,
-                 request_timeout_s: float = 60.0):
+                 request_timeout_s: float = 60.0,
+                 admin_keys: Optional[Mapping[str, str]] = None):
         if not api_keys:
             raise ValueError("MemoryFrontend needs at least one api key "
                              "(api_key -> tenant)")
         self.service = service
         self.api_keys: Dict[str, str] = dict(api_keys)
+        # the admin keyring (admin_key -> operator label) is DISJOINT from
+        # tenant keys: a tenant key can never reach the admin surface, and
+        # an admin key is not a tenant.  No admin_keys = no admin surface.
+        self.admin_keys: Dict[str, str] = dict(admin_keys or {})
+        overlap = set(self.api_keys) & set(self.admin_keys)
+        if overlap:
+            raise ValueError("api_keys and admin_keys must be disjoint "
+                             f"({len(overlap)} shared keys)")
         self.request_timeout_s = float(request_timeout_s)
         self.counters = {"requests": 0, "unauthorized": 0, "bad_requests": 0,
                          "rejected": 0, "errors": 0, "timeouts": 0,
-                         "streams": 0}
+                         "streams": 0, "policy_reloads": 0}
         self._counter_lock = threading.Lock()
         frontend = self
 
@@ -202,6 +211,21 @@ class MemoryFrontend:
             raise _HttpError(401, "unknown api key")
         return tenant
 
+    def _admin_auth(self, handler) -> str:
+        if not self.admin_keys:
+            # no keyring mounted: the admin surface does not exist — 404,
+            # not 401, so probing cannot distinguish "wrong key" from
+            # "no surface"
+            raise _HttpError(404, "admin surface not enabled")
+        auth = handler.headers.get("Authorization", "")
+        key = auth[7:] if auth.startswith("Bearer ") else \
+            handler.headers.get("X-Api-Key", "")
+        operator = self.admin_keys.get(key)
+        if operator is None:
+            self._count("unauthorized")
+            raise _HttpError(401, "unknown admin key")
+        return operator
+
     @staticmethod
     def _body(handler) -> dict:
         length = int(handler.headers.get("Content-Length") or 0)
@@ -241,8 +265,14 @@ class MemoryFrontend:
     def _dispatch(self, handler, method: str) -> None:
         self._count("requests")
         try:
-            tenant = self._auth(handler)
             route = (method, handler.path.split("?", 1)[0])
+            if route == ("POST", "/v1/admin/policy"):
+                # admin routes authenticate against their own keyring, so
+                # they match BEFORE tenant auth (a tenant key must 401
+                # here, not fall through to "unknown route")
+                self._handle_admin_policy(handler)
+                return
+            tenant = self._auth(handler)
             if route == ("POST", "/v1/retrieve"):
                 self._handle_retrieve(handler, tenant)
             elif route == ("POST", "/v1/record"):
@@ -296,7 +326,8 @@ class MemoryFrontend:
                 resp = MemoryResponse(
                     payload=payload, op="retrieve",
                     service_s=time.monotonic() - t0,
-                    token_count=getattr(payload, "token_count", None))
+                    token_count=getattr(payload, "token_count", None),
+                    degraded=getattr(payload, "degraded", False))
             elif isinstance(req, RecordRequest):
                 self.service.record(req.namespace, req.session_id,
                                     list(req.messages))
@@ -388,6 +419,26 @@ class MemoryFrontend:
                                                          False)))
         [fut] = self._submit([req], tenant)
         self._respond_envelope(handler, self._wait(fut))
+
+    def _handle_admin_policy(self, handler) -> None:
+        """POST /v1/admin/policy — swap the scheduler's AdmissionPolicy
+        without a restart.  Authenticated against the admin keyring; the
+        body is the `admission_policy_from_json` shape.  Traffic in flight
+        keeps its queues; the next submit/select runs under the new
+        limits."""
+        operator = self._admin_auth(handler)
+        body = self._body(handler)
+        policy = admission_policy_from_json(body)
+        sched = getattr(self.service, "scheduler", None)
+        if sched is None or sched.closed:
+            raise _HttpError(409, "no scheduler mounted: admission policy "
+                                  "reload needs one running")
+        sched.set_admission_policy(policy)
+        self._count("policy_reloads")
+        self._send_json(handler, 200,
+                        {"status": "ok", "op": "policy_reload",
+                         "operator": operator,
+                         "tenants": sorted(policy.tenants)})
 
     def _handle_stats(self, handler, tenant: str) -> None:
         st = {"service": self.service.stats(),

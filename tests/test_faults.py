@@ -1,0 +1,215 @@
+"""Fault-injection layer (checkpoint/faults.py): the POSIX power-loss
+model behind every crash test — torn writes, bit flips, disk-full, crash
+points around write/fsync/rename/dir-fsync — plus the parent-directory
+fsync regression in checkpoint/io.py (a freshly created file's direntry
+can vanish on power loss unless the parent directory is fsync'd)."""
+import errno
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import faults
+from repro.checkpoint.faults import (FaultRule, FaultyFS, InjectedCrash,
+                                     RealFS)
+from repro.checkpoint.io import load_raw, save
+from repro.checkpoint.wal import WriteAheadLog, atomic_write_bytes
+
+
+# -- the filesystem model ------------------------------------------------------
+
+def test_realfs_is_the_default_and_writes_normally(tmp_path):
+    assert isinstance(faults.active(), RealFS)
+    p = str(tmp_path / "f")
+    faults.active().write_file(p, b"hello", fsync=True)
+    with open(p, "rb") as f:
+        assert f.read() == b"hello"
+
+
+def test_install_swaps_and_restores_the_active_fs(tmp_path):
+    fs = FaultyFS(str(tmp_path))
+    before = faults.active()
+    with faults.install(fs):
+        assert faults.active() is fs
+    assert faults.active() is before
+
+
+def test_power_loss_removes_unsynced_files(tmp_path):
+    fs = FaultyFS(str(tmp_path))
+    synced, unsynced = str(tmp_path / "a"), str(tmp_path / "b")
+    with faults.install(fs):
+        fs.write_file(synced, b"one", fsync=True)
+        fs.fsync_dir(str(tmp_path))
+        fs.write_file(unsynced, b"two", fsync=False)
+        fs.simulate_power_loss()
+    assert os.path.exists(synced)
+    assert not os.path.exists(unsynced)
+
+
+def test_power_loss_reverts_unsynced_overwrite_of_durable_file(tmp_path):
+    fs = FaultyFS(str(tmp_path))
+    p = str(tmp_path / "a")
+    with faults.install(fs):
+        fs.write_file(p, b"old", fsync=True)
+        fs.fsync_dir(str(tmp_path))
+        fs.write_file(p, b"new", fsync=False)   # in place, never fsync'd
+        fs.simulate_power_loss()
+    with open(p, "rb") as f:
+        assert f.read() == b"old"
+
+
+def test_content_fsync_without_dir_fsync_loses_new_entry(tmp_path):
+    """The precise failure io.py's bugfix closes: fsync(file) makes the
+    CONTENT durable, but a brand-new file's directory entry needs the
+    parent dir fsync'd too."""
+    fs = FaultyFS(str(tmp_path))
+    p = str(tmp_path / "fresh")
+    with faults.install(fs):
+        fs.write_file(p, b"data", fsync=True)   # no fsync_dir
+        fs.simulate_power_loss()
+    assert not os.path.exists(p)
+
+
+def test_rename_without_dir_fsync_can_revert(tmp_path):
+    fs = FaultyFS(str(tmp_path))
+    tmp, dst = str(tmp_path / "t.tmp"), str(tmp_path / "t")
+    with faults.install(fs):
+        fs.write_file(tmp, b"payload", fsync=True)
+        fs.replace(tmp, dst)
+        fs.simulate_power_loss()                # no fsync_dir
+    assert not os.path.exists(dst)
+
+
+def test_enospc_mode_raises_oserror_without_crashing_the_model(tmp_path):
+    fs = FaultyFS(str(tmp_path),
+                  rules=[FaultRule("write", mode="enospc", nth=2)])
+    a, b = str(tmp_path / "a"), str(tmp_path / "b")
+    with faults.install(fs):
+        fs.write_file(a, b"x", fsync=True)
+        with pytest.raises(OSError) as ei:
+            fs.write_file(b, b"y", fsync=True)
+        assert ei.value.errno == errno.ENOSPC
+        fs.fsync_dir(str(tmp_path))
+        fs.simulate_power_loss()
+    assert os.path.exists(a) and not os.path.exists(b)
+
+
+def test_rules_fire_on_nth_match_and_repeat(tmp_path):
+    fs = FaultyFS(str(tmp_path), rules=[
+        FaultRule("write", path_substr="wal", nth=2)])
+    with faults.install(fs):
+        fs.write_file(str(tmp_path / "wal-1"), b"x", fsync=True)  # 1st: ok
+        with pytest.raises(InjectedCrash):
+            fs.write_file(str(tmp_path / "wal-2"), b"x", fsync=True)
+        # non-repeating rule is spent
+        fs.write_file(str(tmp_path / "wal-3"), b"x", fsync=True)
+    assert [t[0] for t in fs.trips] == ["write"]
+
+
+def test_paths_outside_the_root_pass_through(tmp_path):
+    inside, outside = tmp_path / "in", tmp_path / "out"
+    inside.mkdir(), outside.mkdir()
+    fs = FaultyFS(str(inside), rules=[FaultRule("write", path_substr="")])
+    p = str(outside / "f")
+    with faults.install(fs):
+        fs.write_file(p, b"x", fsync=True)      # rule must not fire
+    assert os.path.exists(p)
+
+
+# -- WAL under injected faults -------------------------------------------------
+
+def test_wal_append_crash_before_rename_loses_nothing_durable(tmp_path):
+    fs = FaultyFS(str(tmp_path),
+                  rules=[FaultRule("replace", path_substr="wal-00000002")])
+    d = str(tmp_path / "w")
+    with faults.install(fs):
+        wal = WriteAheadLog(d)
+        wal.append({"op": "a"})
+        with pytest.raises(InjectedCrash):
+            wal.append({"op": "b"})
+        fs.simulate_power_loss()
+    wal2 = WriteAheadLog(d)
+    assert [r["op"] for _, r in wal2.replay_records()] == ["a"]
+    assert wal2.replay_stopped_seq is None      # clean tail, not corrupt
+
+
+def test_wal_torn_write_never_becomes_a_segment(tmp_path):
+    """A torn tmp-file write crashes before the rename: power loss leaves
+    at most a stray .tmp, never a half-written wal-*.msgpack segment."""
+    fs = FaultyFS(str(tmp_path),
+                  rules=[FaultRule("write", mode="torn",
+                                   path_substr="wal-00000002")])
+    d = str(tmp_path / "w")
+    with faults.install(fs):
+        wal = WriteAheadLog(d)
+        wal.append({"op": "a"})
+        with pytest.raises(InjectedCrash):
+            wal.append({"op": "b"})
+        fs.simulate_power_loss()
+    names = os.listdir(d)
+    assert "wal-00000002.msgpack" not in names
+    wal2 = WriteAheadLog(d)
+    assert [r["op"] for _, r in wal2.replay_records()] == ["a"]
+
+
+def test_wal_fsync_crash_means_segment_not_durable(tmp_path):
+    fs = FaultyFS(str(tmp_path),
+                  rules=[FaultRule("fsync", path_substr="wal-00000001")])
+    d = str(tmp_path / "w")
+    with faults.install(fs):
+        wal = WriteAheadLog(d)
+        with pytest.raises(InjectedCrash):
+            wal.append({"op": "a"})
+        fs.simulate_power_loss()
+    wal2 = WriteAheadLog(d)
+    assert list(wal2.replay_records()) == []
+
+
+def test_atomic_write_goes_through_the_fault_layer(tmp_path):
+    fs = FaultyFS(str(tmp_path))
+    p = str(tmp_path / "blob")
+    with faults.install(fs):
+        atomic_write_bytes(p, b"payload")
+        fs.simulate_power_loss()    # full sequence incl. dir fsync survives
+    with open(p, "rb") as f:
+        assert f.read() == b"payload"
+
+
+# -- the checkpoint/io.py regression ------------------------------------------
+
+def test_save_fsync_survives_power_loss(tmp_path):
+    """Regression: save(fsync=True) must fsync the PARENT DIRECTORY too,
+    or the freshly created snapshot can vanish wholesale on power loss."""
+    fs = FaultyFS(str(tmp_path))
+    p = str(tmp_path / "state.msgpack")
+    tree = {"x": np.arange(8, dtype=np.int64), "y": np.ones((2, 3), np.float32)}
+    with faults.install(fs):
+        save(p, tree, fsync=True)
+        fs.simulate_power_loss()
+        assert os.path.exists(p), \
+            "snapshot direntry lost: parent dir was not fsync'd"
+    got = load_raw(p)
+    np.testing.assert_array_equal(got["x"], tree["x"])
+    np.testing.assert_array_equal(got["y"], tree["y"])
+
+
+def test_save_without_dir_fsync_would_lose_the_file(tmp_path):
+    """Counterexample proving the model detects the bug the fix closes: if
+    the dir fsync is crashed out, power loss erases the entry."""
+    fs = FaultyFS(str(tmp_path),
+                  rules=[FaultRule("fsync_dir", path_substr="")])
+    p = str(tmp_path / "state.msgpack")
+    with faults.install(fs):
+        with pytest.raises(InjectedCrash):
+            save(p, {"x": np.arange(4)}, fsync=True)
+        fs.simulate_power_loss()
+        assert not os.path.exists(p)
+
+
+def test_save_atomic_survives_power_loss(tmp_path):
+    fs = FaultyFS(str(tmp_path))
+    p = str(tmp_path / "snap.msgpack")
+    with faults.install(fs):
+        save(p, {"x": np.arange(4)}, atomic=True, fsync=True)
+        fs.simulate_power_loss()
+    assert (load_raw(p)["x"] == np.arange(4)).all()

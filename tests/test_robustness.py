@@ -1,0 +1,327 @@
+"""Client- and control-plane robustness: HttpMemory's bounded retry
+(exponential backoff + jitter, Retry-After honored, transient-only) against
+a deliberately flaky HTTP server, and dynamic AdmissionPolicy reload — the
+authenticated admin endpoint swapping the mounted policy under live
+traffic without a restart."""
+import json
+import random
+import threading
+import urllib.request
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+import pytest
+
+from repro.core import (AdmissionPolicy, MemoryScheduler, MemoryService,
+                        TenantPolicy)
+from repro.core.admission import AdmissionError
+from repro.core.embedder import HashEmbedder
+from repro.core.sdk import HttpMemory, RetryPolicy
+from repro.serving.frontend import MemoryFrontend
+
+EMB = HashEmbedder()
+KEYS = {"key-acme": "acme", "key-beta": "beta"}
+
+_OK_ENV = {"status": "ok", "payload": {
+    "kind": "retrieved_context", "triples": [], "summaries": [],
+    "text": "remembered", "token_count": 3}}
+
+
+# -- a scriptable flaky server -------------------------------------------------
+
+class _FlakyServer:
+    """Answers each request with the next scripted step: an int HTTP
+    status, or "drop" (close the socket before responding — a connection
+    reset from the client's point of view).  Steps past the end of the
+    script answer 200."""
+
+    def __init__(self, script):
+        self.script = list(script)
+        self.requests = []
+        outer = self
+
+        class Handler(BaseHTTPRequestHandler):
+            def do_POST(self):
+                n = int(self.headers.get("Content-Length") or 0)
+                outer.requests.append(
+                    (self.path, json.loads(self.rfile.read(n) or b"{}")))
+                step = outer.script.pop(0) if outer.script else 200
+                if step == "drop":
+                    self.connection.close()
+                    return
+                if step == 200:
+                    body = _OK_ENV
+                elif step == 429:
+                    body = {"error": "rate limited", "reason": "rate_limited",
+                            "retry_after_s": 0.25}
+                else:
+                    body = {"error": f"scripted {step}"}
+                blob = json.dumps(body).encode()
+                self.send_response(step)
+                self.send_header("Content-Type", "application/json")
+                self.send_header("Content-Length", str(len(blob)))
+                self.end_headers()
+                self.wfile.write(blob)
+
+            def log_message(self, *a):
+                pass
+
+        self.httpd = ThreadingHTTPServer(("127.0.0.1", 0), Handler)
+        self.thread = threading.Thread(target=self.httpd.serve_forever,
+                                       daemon=True)
+        self.thread.start()
+
+    @property
+    def url(self):
+        return f"http://127.0.0.1:{self.httpd.server_port}"
+
+    def close(self):
+        self.httpd.shutdown()
+        self.httpd.server_close()
+
+
+def _client(url, **policy_kw):
+    policy_kw.setdefault("base_backoff_s", 0.001)
+    policy_kw.setdefault("max_backoff_s", 0.05)
+    mem = HttpMemory(url, "key", retry=RetryPolicy(**policy_kw))
+    sleeps = []
+    mem._sleep = sleeps.append           # no real sleeping in tests
+    mem._rng = random.Random(7)          # deterministic jitter
+    return mem, sleeps
+
+
+# -- HttpMemory retry ----------------------------------------------------------
+
+def test_retries_5xx_then_succeeds():
+    srv = _FlakyServer([500, 503, 200])
+    try:
+        mem, sleeps = _client(srv.url)
+        ctx = mem.retrieve("anything")
+        assert ctx.text == "remembered"
+        assert mem.counters == {"requests": 1, "retries": 2}
+        assert len(srv.requests) == 3
+        assert len(sleeps) == 2 and all(0 < s <= 0.05 for s in sleeps)
+        assert sleeps[1] > sleeps[0] / 2      # roughly exponential (jitter)
+    finally:
+        srv.close()
+
+
+def test_retries_connection_drop():
+    srv = _FlakyServer(["drop", 200])
+    try:
+        mem, _ = _client(srv.url)
+        assert mem.retrieve("q").text == "remembered"
+        assert mem.counters["retries"] == 1
+        assert len(srv.requests) == 2
+    finally:
+        srv.close()
+
+
+def test_429_backs_off_by_the_servers_retry_after_hint():
+    srv = _FlakyServer([429, 200])
+    try:
+        mem, sleeps = _client(srv.url, max_backoff_s=2.0)
+        assert mem.retrieve("q").text == "remembered"
+        assert sleeps == [0.25]               # the hint, not the exponential
+    finally:
+        srv.close()
+
+
+def test_max_attempts_exhaustion_reraises_the_last_failure():
+    srv = _FlakyServer([500] * 8)
+    try:
+        mem, sleeps = _client(srv.url, max_attempts=3)
+        with pytest.raises(RuntimeError, match="HTTP 500") as ei:
+            mem.retrieve("q")
+        assert ei.value.http_status == 500
+        assert len(srv.requests) == 3         # tries == max_attempts, no more
+        assert mem.counters["retries"] == 2 and len(sleeps) == 2
+    finally:
+        srv.close()
+
+
+def test_non_retryable_4xx_fails_immediately():
+    srv = _FlakyServer([404, 200])
+    try:
+        mem, sleeps = _client(srv.url)
+        with pytest.raises(RuntimeError, match="HTTP 404"):
+            mem.retrieve("q")
+        assert len(srv.requests) == 1 and sleeps == []
+        assert mem.counters["retries"] == 0
+    finally:
+        srv.close()
+
+
+def test_retry_rate_limited_false_surfaces_429_immediately():
+    srv = _FlakyServer([429, 200])
+    try:
+        mem, _ = _client(srv.url, retry_rate_limited=False)
+        with pytest.raises(AdmissionError) as ei:
+            mem.retrieve("q")
+        assert ei.value.reason == "rate_limited"
+        assert ei.value.retry_after_s == 0.25
+        assert len(srv.requests) == 1
+    finally:
+        srv.close()
+
+
+def test_retry_policy_backoff_shape_and_validation():
+    pol = RetryPolicy(base_backoff_s=0.1, max_backoff_s=1.0, jitter=0.0)
+    rng = random.Random(0)
+    assert [pol.backoff_s(a, rng) for a in range(5)] == \
+        [0.1, 0.2, 0.4, 0.8, 1.0]             # capped at max_backoff_s
+    assert pol.backoff_s(0, rng, retry_after_s=9.0) == 1.0   # hint capped
+    assert pol.backoff_s(3, rng, retry_after_s=0.3) == 0.3   # hint replaces
+    jittered = RetryPolicy(base_backoff_s=0.1, max_backoff_s=10.0,
+                           jitter=0.5)
+    for a in range(4):
+        raw = 0.1 * 2 ** a
+        assert raw / 2 <= jittered.backoff_s(a, rng) <= raw
+    for bad in (dict(max_attempts=0), dict(base_backoff_s=-1),
+                dict(jitter=1.5)):
+        with pytest.raises(ValueError):
+            RetryPolicy(**bad)
+
+
+# -- dynamic admission policy reload -------------------------------------------
+
+def _call(fe, path, body=None, key="key-acme", method=None):
+    req = urllib.request.Request(
+        fe.address + path,
+        data=None if body is None else json.dumps(body).encode(),
+        headers={"Authorization": f"Bearer {key}"},
+        method=method or ("GET" if body is None else "POST"))
+    try:
+        with urllib.request.urlopen(req, timeout=30) as r:
+            return r.status, json.loads(r.read().decode())
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read().decode())
+
+
+def test_set_policy_swaps_limits_without_restart():
+    svc = MemoryService(EMB, use_kernel=False, budget=800)
+    sched = MemoryScheduler(
+        svc, tick_interval_s=0.002,
+        admission=AdmissionPolicy(
+            tenants={"acme": TenantPolicy(rate=0.001, burst=2)}))
+    try:
+        for _ in range(2):
+            svc.retrieve("acme/c0", "q")
+        with pytest.raises(AdmissionError):   # bucket drained, 0.001/s refill
+            svc.retrieve("acme/c0", "q")
+        sched.set_admission_policy(AdmissionPolicy(
+            tenants={"acme": TenantPolicy(rate=1000.0, burst=100)}))
+        # a reload never refills spent tokens (that would make reloads an
+        # abuse lever) — but at the new 1000/s rate the drained bucket is
+        # usable again within milliseconds
+        threading.Event().wait(0.02)
+        svc.retrieve("acme/c0", "q")
+        assert sched.admission.counters["policy_reloads"] == 1
+    finally:
+        sched.close()
+
+
+def test_policy_reload_under_concurrent_traffic():
+    """Swap policies while worker threads hammer the scheduler: no request
+    may hang or fail with anything but a clean admission rejection, and
+    the final (restrictive) policy must actually bite."""
+    svc = MemoryService(EMB, use_kernel=False, budget=800)
+    sched = svc.start_scheduler(tick_interval_s=0.002, max_batch=16)
+    stop = threading.Event()
+    outcomes, errors = [], []
+
+    def worker(i):
+        while not stop.is_set():
+            try:
+                svc.retrieve(f"t{i}/c0", "anything at all")
+                outcomes.append("ok")
+            except AdmissionError:
+                outcomes.append("rejected")
+            except Exception as e:            # anything else is a bug
+                errors.append(repr(e))
+                return
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(4)]
+    try:
+        for t in threads:
+            t.start()
+        liberal = AdmissionPolicy(default=TenantPolicy(burst=64))
+        strict = AdmissionPolicy(default=TenantPolicy(rate=50.0, burst=2))
+        for i in range(10):                   # 10 live swaps under load
+            sched.set_admission_policy(strict if i % 2 else liberal)
+            threading.Event().wait(0.01)
+        stop.set()
+        for t in threads:
+            t.join(timeout=30)
+        assert not any(t.is_alive() for t in threads), "worker hung"
+        assert errors == [], errors
+        assert outcomes.count("ok") > 0
+        assert sched.admission.counters["policy_reloads"] == 10
+        # the last-installed strict policy is live for fresh tenants
+        svc.retrieve("fresh/c0", "q")
+        svc.retrieve("fresh/c0", "q")
+        with pytest.raises(AdmissionError):   # burst=2 exhausted
+            svc.retrieve("fresh/c0", "q")
+    finally:
+        stop.set()
+        sched.close()
+
+
+def test_admin_endpoint_reloads_policy_over_http():
+    svc = MemoryService(EMB, use_kernel=False, budget=800)
+    sched = MemoryScheduler(
+        svc, tick_interval_s=0.002,
+        admission=AdmissionPolicy(
+            tenants={"acme": TenantPolicy(rate=0.001, burst=2)}))
+    fe = MemoryFrontend(svc, KEYS,
+                        admin_keys={"admin-key": "oncall"}).start()
+    try:
+        for _ in range(2):
+            st, _ = _call(fe, "/v1/retrieve", {"namespace": "c", "query": "q"})
+            assert st == 200
+        st, env = _call(fe, "/v1/retrieve", {"namespace": "c", "query": "q"})
+        assert st == 429
+        st, env = _call(fe, "/v1/admin/policy",
+                        {"tenants": {"acme": {"rate": 1000, "burst": 100}}},
+                        key="admin-key")
+        assert st == 200
+        assert env["op"] == "policy_reload" and env["operator"] == "oncall"
+        assert env["tenants"] == ["acme"]
+        threading.Event().wait(0.02)          # drained bucket refills at
+        st, _ = _call(fe, "/v1/retrieve",     # the new 1000/s rate
+                      {"namespace": "c", "query": "q"})
+        assert st == 200                      # un-throttled without restart
+        assert fe.counters["policy_reloads"] == 1
+        # a typo'd knob fails loudly instead of silently no-opping
+        st, env = _call(fe, "/v1/admin/policy",
+                        {"tenants": {"acme": {"rrate": 1}}}, key="admin-key")
+        assert st == 400 and "unknown tenant policy keys" in env["error"]
+    finally:
+        fe.close()
+        sched.close()
+
+
+def test_admin_surface_auth_contract():
+    svc = MemoryService(EMB, use_kernel=False, budget=800)
+    body = {"tenants": {}}
+    # no admin keyring mounted: the surface does not exist (404, so probing
+    # cannot distinguish "wrong key" from "not enabled")
+    fe = MemoryFrontend(svc, KEYS).start()
+    try:
+        st, env = _call(fe, "/v1/admin/policy", body, key="whatever")
+        assert st == 404 and "not enabled" in env["error"]
+    finally:
+        fe.close()
+    fe = MemoryFrontend(svc, KEYS, admin_keys={"admin-key": "ops"}).start()
+    try:
+        st, _ = _call(fe, "/v1/admin/policy", body, key="wrong-key")
+        assert st == 401
+        # a TENANT key is not an admin key
+        st, _ = _call(fe, "/v1/admin/policy", body, key="key-acme")
+        assert st == 401
+        # authenticated but no scheduler mounted: nothing to reload into
+        st, env = _call(fe, "/v1/admin/policy", body, key="admin-key")
+        assert st == 409 and "no scheduler" in env["error"]
+    finally:
+        fe.close()
+    with pytest.raises(ValueError, match="disjoint"):
+        MemoryFrontend(svc, KEYS, admin_keys={"key-acme": "ops"})
