@@ -59,6 +59,14 @@ if [[ "${FAST_ONLY:-0}" != "1" ]]; then
     echo "== BENCH_scheduler.json =="
     cat BENCH_scheduler.json
 
+    echo "== bench: telemetry overhead (instrumented vs disabled closed loop) =="
+    # asserts tracing + metrics add < 5% to closed-loop p50 (median of
+    # interleaved within-pair ratios — robust to shared-runner drift)
+    JAX_PLATFORMS=cpu python benchmarks/telemetry_overhead_bench.py \
+        --assert-overhead 1.05 --json BENCH_telemetry.json
+    echo "== BENCH_telemetry.json =="
+    cat BENCH_telemetry.json
+
     echo "== bench: per-tenant QoS (1 abusive + N well-behaved tenants) =="
     # asserts one flooding tenant degrades well-behaved p99 by < 2x vs the
     # no-abuser baseline (admission control protects the fleet)

@@ -40,6 +40,7 @@ from typing import List, Optional, Tuple
 from repro.checkpoint import faults
 from repro.checkpoint.wal import (CorruptSegmentError, WriteAheadLog,
                                   atomic_write_bytes, fsync_dir)
+from repro.obs.telemetry import get_telemetry
 
 SHARD_DIR_RE = re.compile(r"^shard-(\d{2})$")
 
@@ -110,14 +111,21 @@ class SegmentShipper:
             self._q.put(rel)
 
     def _ship_one(self, rel: str) -> None:
+        tel = get_telemetry()
         try:
-            faults.active().trip("ship", rel)
-            with open(os.path.join(self.source_dir, rel), "rb") as f:
-                blob = f.read()
-            self.sink.put(rel, blob)
+            with tel.span("replication.ship", segment=rel):
+                faults.active().trip("ship", rel)
+                with open(os.path.join(self.source_dir, rel), "rb") as f:
+                    blob = f.read()
+                self.sink.put(rel, blob)
             self.counters["shipped"] += 1
+            tel.inc("memori_replication_shipped",
+                    help="WAL segments shipped to the follower sink")
         except Exception as e:
             self.counters["failed"] += 1
+            tel.inc("memori_replication_failed",
+                    help="WAL segment ship failures (replication lag)")
+            tel.event("replication_failed", segment=rel, error=str(e))
             warnings.warn(f"WAL segment ship failed for {rel}: {e}",
                           stacklevel=2)
 

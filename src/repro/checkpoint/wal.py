@@ -40,6 +40,7 @@ from typing import Dict, Iterator, List, Optional, Tuple
 import msgpack
 
 from repro.checkpoint import faults
+from repro.obs.telemetry import FSYNC_LATENCY, get_telemetry
 
 SEGMENT_VERSION = 1
 MANIFEST_NAME = "MANIFEST.msgpack"
@@ -56,11 +57,18 @@ def atomic_write_bytes(path: str, blob: bytes) -> None:
     """tmp + fsync + rename + dir-fsync: the file exists completely or not
     at all, and survives power loss once this returns.  All three steps
     route through `checkpoint.faults` so tests can crash between them."""
+    tel = get_telemetry()
+    t0 = time.perf_counter()
     fs = faults.active()
     tmp = path + ".tmp"
     fs.write_file(tmp, blob, fsync=True)
     fs.replace(tmp, path)
     fs.fsync_dir(os.path.dirname(os.path.abspath(path)))
+    tel.inc("memori_wal_fsyncs",
+            help="atomic durable writes (file fsync + rename + dir fsync)")
+    tel.observe(FSYNC_LATENCY, time.perf_counter() - t0,
+                help="atomic durable write latency (fsync + rename + "
+                     "dir fsync)")
 
 
 class CorruptSegmentError(RuntimeError):
@@ -146,7 +154,10 @@ class WriteAheadLog:
             "crc": zlib.crc32(payload),
             "payload": payload,
         }, use_bin_type=True)
-        atomic_write_bytes(self._seg_path(seq), envelope)
+        tel = get_telemetry()
+        with tel.span("wal.append", seq=seq, bytes=len(envelope)):
+            atomic_write_bytes(self._seg_path(seq), envelope)
+        tel.inc("memori_wal_appends", help="WAL segments appended")
         self._next_seq = seq + 1
         if self.on_seal is not None:
             self.on_seal(self._seg_path(seq))
@@ -178,7 +189,12 @@ class WriteAheadLog:
             "crc": zlib.crc32(payload),
             "payload": payload,
         }, use_bin_type=True)
-        atomic_write_bytes(self._seg_path(first), envelope)
+        tel = get_telemetry()
+        with tel.span("wal.group_commit", seq=first, records=len(records),
+                      bytes=len(envelope)):
+            atomic_write_bytes(self._seg_path(first), envelope)
+        tel.inc("memori_wal_group_commits",
+                help="multi-record WAL group-commit segments")
         self._next_seq = first + len(records)
         if self.on_seal is not None:
             self.on_seal(self._seg_path(first))
@@ -224,6 +240,8 @@ class WriteAheadLog:
                 moved.append(os.path.basename(path) + ".corrupt")
         if moved:
             fsync_dir(self.dir)
+            get_telemetry().event("wal_quarantine", dir=self.dir,
+                                  from_seq=int(file_seq), files=moved)
             warnings.warn(f"WAL quarantined un-replayable tail: {moved}",
                           stacklevel=2)
         return moved

@@ -47,6 +47,7 @@ from repro.checkpoint.replication import (DirectorySink, SegmentShipper,
 from repro.core.extraction import Extractor, Message
 from repro.core.store import MemoryStore
 from repro.core.tiering import TierPolicy
+from repro.obs.telemetry import get_telemetry
 
 
 class BackpressureError(RuntimeError):
@@ -196,6 +197,8 @@ class LifecycleRuntime:
                 after = wal_through
                 break
             except Exception as e:           # fall back a generation
+                get_telemetry().event("recovery_snapshot_fallback",
+                                      path=path, error=str(e))
                 warnings.warn(f"snapshot {path} unrestorable ({e}); "
                               "falling back to an older generation",
                               stacklevel=2)
@@ -228,6 +231,10 @@ class LifecycleRuntime:
                      else wal.replay_stopped_seq)
         if dead_from is not None:
             wal.quarantine_from(dead_from)
+        get_telemetry().event("recovery", dir=data_dir,
+                              snapshot_through=after,
+                              clean=dead_from is None,
+                              quarantined_from=dead_from)
         rt = cls(store, data_dir=data_dir, policy=policy, start=start,
                  _recovered=True)
         if dead_from is not None:
@@ -270,6 +277,7 @@ class LifecycleRuntime:
             mp = self.policy.max_pending
             if mp is not None and self.store.pending_count >= mp:
                 if self.policy.backpressure == "reject":
+                    self._note_backpressure(namespace, "reject")
                     raise BackpressureError(
                         f"pending queue full ({self.store.pending_count}"
                         f"/{mp})")
@@ -280,6 +288,7 @@ class LifecycleRuntime:
                     remaining = (None if deadline is None
                                  else deadline - time.monotonic())
                     if remaining is not None and remaining <= 0:
+                        self._note_backpressure(namespace, "block_timeout")
                         raise BackpressureError(
                             f"enqueue blocked > "
                             f"{self.policy.enqueue_timeout_s}s on a full "
@@ -292,6 +301,24 @@ class LifecycleRuntime:
         """Client-facing ops call this; the idle window gating
         auto-compaction measures time since the last call."""
         self._last_activity = time.monotonic()
+
+    def _note_backpressure(self, namespace: str, kind: str) -> None:
+        tel = get_telemetry()
+        tel.inc("memori_backpressure_rejections",
+                help="enqueues rejected (or timed out) by bounded-queue "
+                     "backpressure")
+        tel.event("backpressure_reject", namespace=namespace, mode=kind,
+                  pending=self.store.pending_count,
+                  max_pending=self.policy.max_pending)
+
+    @property
+    def rejecting(self) -> bool:
+        """True while an enqueue would raise BackpressureError right now:
+        reject-mode backpressure with the bounded queue at capacity (the
+        frontend's readiness probe reports 503 while this holds)."""
+        mp = self.policy.max_pending
+        return (mp is not None and self.policy.backpressure == "reject"
+                and self.store.pending_count >= mp)
 
     # -- group commit -------------------------------------------------------
     @contextlib.contextmanager
@@ -366,7 +393,8 @@ class LifecycleRuntime:
         truncate covered WAL segments."""
         if self.wal is None:
             raise RuntimeError("rotate() needs a durable data_dir")
-        with self.lock:
+        tel = get_telemetry()
+        with self.lock, tel.span("lifecycle.rotate"):
             self.flush()
             wal_through = self.wal.last_seq
             path = self.wal.snapshot_path(wal_through)
@@ -375,6 +403,9 @@ class LifecycleRuntime:
                 wal_through, retain=self.policy.snapshot_retain)
             self._last_snapshot_mono = time.monotonic()
             self.counters["rotations"] += 1
+            tel.inc("memori_snapshot_rotations",
+                    help="snapshot rotations (full snapshot + WAL "
+                         "truncation)")
             info.update({"wal_through": wal_through, "bytes": nbytes,
                          "path": path})
             return info

@@ -64,10 +64,11 @@ from concurrent.futures import Future, InvalidStateError
 from dataclasses import dataclass
 from typing import List, Optional, Sequence, Union
 
-from repro.core.admission import (AdmissionController, AdmissionPolicy,
-                                  tenant_of)
+from repro.core.admission import (AdmissionController, AdmissionError,
+                                  AdmissionPolicy, tenant_of)
 from repro.core.api import (CompactRequest, EvictRequest, MemoryRequest,
                             MemoryResponse, RecordRequest, RetrieveRequest)
+from repro.obs.telemetry import RECORD_LATENCY, get_telemetry
 
 _REQUEST_TYPES = (RetrieveRequest, RecordRequest, EvictRequest,
                   CompactRequest)
@@ -82,6 +83,9 @@ class _Pending:
     t_submit: float
     tenant: str = ""
     seq: int = 0
+    # the edge's Trace (obs/telemetry.py), when the submitter wants this
+    # request's tick + plan stages recorded into its span tree
+    trace: Optional[object] = None
 
 
 class MemoryScheduler:
@@ -129,13 +133,17 @@ class MemoryScheduler:
         return self.submit_many([request], tenant=tenant)[0]
 
     def submit_many(self, requests: Sequence[MemoryRequest],
-                    tenant: Optional[str] = None) -> List[Future]:
+                    tenant: Optional[str] = None,
+                    traces: Optional[Sequence] = None) -> List[Future]:
         """Queue several requests as one adjacent block (they share a tick
         and, for retrieves, one device launch — plus whatever other clients
         queued around them).  `tenant` pins the whole block to one QoS
         identity (the HTTP frontend passes its api-key tenant); without it
         each request's namespace prefix is the tenant.  Admission is
-        all-or-nothing: a rejected block (AdmissionError) queues nothing."""
+        all-or-nothing: a rejected block (AdmissionError) queues nothing.
+        `traces` (parallel to `requests`, entries may be None) carries each
+        request's edge Trace so the tick that executes it records its queue
+        wait, the tick itself, and every plan stage into that tree."""
         for r in requests:
             if not isinstance(r, _REQUEST_TYPES):
                 raise TypeError(
@@ -144,6 +152,7 @@ class MemoryScheduler:
                     f"got {type(r).__name__}")
         tenants = [tenant if tenant is not None else tenant_of(r)
                    for r in requests]
+        tr = list(traces) if traces is not None else [None] * len(tenants)
         counts: dict = {}
         for t in tenants:
             counts[t] = counts.get(t, 0) + 1
@@ -151,11 +160,21 @@ class MemoryScheduler:
         with self._cv:
             if self._closed:
                 raise RuntimeError("scheduler is closed")
-            self.admission.admit_batch(list(counts.items()))
+            try:
+                self.admission.admit_batch(list(counts.items()))
+            except AdmissionError as e:
+                tel = get_telemetry()
+                tel.inc("memori_admission_rejections",
+                        help="request blocks rejected by admission control "
+                             "(rate limit or load shed)")
+                tel.event("admission_reject", tenants=sorted(counts),
+                          requests=len(requests), error=str(e))
+                raise
             pend = []
-            for r, t in zip(requests, tenants):
+            for r, t, trc in zip(requests, tenants, tr):
                 self._seq += 1
-                pend.append(_Pending(r, Future(), now, t, seq=self._seq))
+                pend.append(_Pending(r, Future(), now, t, seq=self._seq,
+                                     trace=trc))
             for p in pend:
                 self.admission.push(p.tenant, p)
             self._cv.notify_all()
@@ -212,7 +231,19 @@ class MemoryScheduler:
         if not batch:
             return {"requests": 0, "retrieve_launches": 0}
         svc = self.service
+        tel = get_telemetry()
         t_tick = time.monotonic()
+        # attach each request's queue wait to its trace: t_submit/t_tick are
+        # monotonic, spans are perf_counter — back-compute the span start
+        # from "now" so the clock bases never mix inside one tree
+        batch_traces = [p.trace for p in batch if p.trace is not None]
+        if batch_traces:
+            now_perf = time.perf_counter()
+            for p in batch:
+                if p.trace is not None and not p.trace.finished:
+                    queued = max(0.0, t_tick - p.t_submit)
+                    p.trace.add_completed("queued", queued,
+                                          t0=now_perf - queued)
         resolutions: List[tuple] = []          # (future, MemoryResponse)
         records: List[_Pending] = []
         launches = 0
@@ -240,6 +271,15 @@ class MemoryScheduler:
                  else contextlib.nullcontext())
         grouped = not isinstance(group, contextlib.nullcontext)
         ginfo = None
+        # the tick span closes (stack.close below) BEFORE any future
+        # resolves, so a handler thread never serializes a trace this
+        # thread is still writing
+        stack = contextlib.ExitStack()
+        if batch_traces:
+            stack.enter_context(tel.activate(batch_traces))
+            stack.enter_context(tel.span("scheduler.tick",
+                                         batch_size=len(batch),
+                                         grouped=grouped))
         try:
             with group as ginfo:
                 i = 0
@@ -252,7 +292,10 @@ class MemoryScheduler:
                             run.append(batch[i + len(run)])
                         t0 = time.monotonic()
                         try:
-                            payloads = svc.execute([q.req for q in run])
+                            # the run's traces (a subset of the batch)
+                            # receive the plan-stage spans execute records
+                            with tel.activate([q.trace for q in run]):
+                                payloads = svc.execute([q.req for q in run])
                         except BaseException as e:
                             for q in run:
                                 fail(q, "retrieve", e)
@@ -272,20 +315,29 @@ class MemoryScheduler:
                         continue
                     t0 = time.monotonic()
                     try:
-                        if isinstance(p.req, RecordRequest):
-                            self._enqueue_record(p.req)
-                            records.append(p)
-                        elif isinstance(p.req, EvictRequest):
-                            n = (svc.evict_superseded(p.req.namespace)
-                                 if p.req.superseded_only
-                                 else svc.evict(p.req.namespace))
-                            done(p, MemoryResponse(
-                                payload=n, op="evict",
-                                service_s=time.monotonic() - t0))
-                        elif isinstance(p.req, CompactRequest):
-                            done(p, MemoryResponse(
-                                payload=svc.compact(), op="compact",
-                                service_s=time.monotonic() - t0))
+                        # write-class ops record only into their own trace
+                        # (the batch-wide set would smear one tenant's
+                        # evict into every tree in the tick)
+                        with tel.activate([p.trace]):
+                            if isinstance(p.req, RecordRequest):
+                                with tel.span("record.enqueue"):
+                                    self._enqueue_record(p.req)
+                                records.append(p)
+                            elif isinstance(p.req, EvictRequest):
+                                with tel.span("evict"):
+                                    n = (svc.evict_superseded(
+                                             p.req.namespace)
+                                         if p.req.superseded_only
+                                         else svc.evict(p.req.namespace))
+                                done(p, MemoryResponse(
+                                    payload=n, op="evict",
+                                    service_s=time.monotonic() - t0))
+                            elif isinstance(p.req, CompactRequest):
+                                with tel.span("compact"):
+                                    payload = svc.compact()
+                                done(p, MemoryResponse(
+                                    payload=payload, op="compact",
+                                    service_s=time.monotonic() - t0))
                     except BaseException as e:
                         fail(p, type(p.req).__name__, e)
                     i += 1
@@ -303,6 +355,8 @@ class MemoryScheduler:
             for p in batch:
                 if id(p.future) not in resolved:
                     fail(p, "group", e)
+        finally:
+            stack.close()
         # futures resolve only after the (possibly grouped) WAL writes are
         # durable — a client never observes an ack for a lost write
         for fut, resp in resolutions:
@@ -358,6 +412,7 @@ class MemoryScheduler:
                     payload={"queued": True, "durable": False},
                     op="record"))
             return
+        tel = get_telemetry()
         t0 = time.monotonic()
         try:
             # one batched flush for every session this tick accepted (plus
@@ -365,8 +420,9 @@ class MemoryScheduler:
             # WAL record.  Through the store under the runtime guard so the
             # commit hook still stamps flush times / wakes blocked
             # enqueuers.
-            with self.service._guard():
-                self.service.store.flush()
+            with tel.activate([p.trace for p in records]):
+                with self.service._guard():
+                    self.service.store.flush()
         except BaseException as e:
             for p in records:
                 fail(p, "record", e)
@@ -374,6 +430,8 @@ class MemoryScheduler:
         with self._cv:
             self.counters["write_flushes"] += 1
         dt = time.monotonic() - t0
+        tel.observe(RECORD_LATENCY, dt, n=len(records),
+                    help="synchronous record (enqueue + flush) latency")
         for p in records:
             done(p, MemoryResponse(
                 payload={"queued": True, "flushed": True,

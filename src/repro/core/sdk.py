@@ -109,6 +109,10 @@ class HttpMemory:
         self.timeout_s = timeout_s
         self.retry = retry or RetryPolicy()
         self.counters = {"requests": 0, "retries": 0}
+        # server-side timing of the most recent op (the envelope's
+        # queued_s/service_s/batch_size + the request id): remote callers
+        # see where the time went, not just wall clock
+        self.last_timing: dict = {}
         # injectable for deterministic tests (no real sleeping, seeded
         # jitter)
         self._sleep: Callable[[float], None] = time.sleep
@@ -181,6 +185,16 @@ class HttpMemory:
             token_count=int(payload.get("token_count") or 0),
             degraded=bool(payload.get("degraded", False)))
 
+    def _note_timing(self, env: dict) -> None:
+        """Keep the envelope's server-side timing split (dropped on the
+        floor before PR 9) where callers can read it back."""
+        self.last_timing = {
+            "queued_s": float(env.get("queued_s") or 0.0),
+            "service_s": float(env.get("service_s") or 0.0),
+            "batch_size": int(env.get("batch_size") or 1),
+            "request_id": env.get("request_id"),
+        }
+
     # -- MemoryLike ---------------------------------------------------------
     def retrieve(self, query: str, top_k=None) -> RetrievedContext:
         body = {"namespace": self.namespace, "query": query}
@@ -189,7 +203,23 @@ class HttpMemory:
         env = self._post("/v1/retrieve", body)
         if env.get("status") != "ok":
             raise RuntimeError(env.get("error") or "retrieve failed")
+        self._note_timing(env)
         return self._context_from_payload(env.get("payload"))
+
+    def retrieve_traced(self, query: str,
+                        top_k=None) -> Tuple[RetrievedContext, dict]:
+        """`retrieve` with `debug: true` — returns (context, span tree):
+        the server-side trace of THIS request (frontend, admission, queue
+        wait, scheduler tick, every executed plan stage), inline."""
+        body = {"namespace": self.namespace, "query": query, "debug": True}
+        if top_k is not None:
+            body["top_k"] = top_k
+        env = self._post("/v1/retrieve", body)
+        if env.get("status") != "ok":
+            raise RuntimeError(env.get("error") or "retrieve failed")
+        self._note_timing(env)
+        return (self._context_from_payload(env.get("payload")),
+                env.get("trace") or {})
 
     def answer_prompt(self, question: str) -> Tuple[str, RetrievedContext]:
         ctx = self.retrieve(question)
@@ -206,6 +236,7 @@ class HttpMemory:
                           "timestamp": m.timestamp} for m in messages]})
         if env.get("status") != "ok":
             raise RuntimeError(env.get("error") or "record failed")
+        self._note_timing(env)
         return env.get("payload") or {}
 
     def stats(self) -> dict:

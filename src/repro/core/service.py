@@ -61,6 +61,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import time
 import warnings
 from typing import Any, List, Optional, Sequence, Tuple
 
@@ -80,6 +81,8 @@ from repro.core.store import MemoryStore
 from repro.core.summaries import Summary
 from repro.core.triples import Triple
 from repro.data.tokenizer import HashTokenizer
+from repro.obs.telemetry import (RECORD_LATENCY, RETRIEVE_LATENCY,
+                                 get_telemetry)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -245,6 +248,7 @@ class MemoryService:
                messages: Sequence[Message]) -> Tuple[List[Triple], Summary]:
         """Synchronous ingest of one session: enqueue + flush (one write
         path — anything else pending is drained in the same batch)."""
+        t0 = time.perf_counter()
         with self._guard():
             if self.runtime is not None:
                 if self.runtime.closed:
@@ -252,7 +256,11 @@ class MemoryService:
                         "service is closed: writes would bypass the "
                         "journal (recover/remount before writing again)")
                 self.runtime.note_activity()
-            return self.store.ingest(namespace, session_id, messages)
+            out = self.store.ingest(namespace, session_id, messages)
+        get_telemetry().observe(
+            RECORD_LATENCY, time.perf_counter() - t0,
+            help="synchronous record (enqueue + flush) latency")
+        return out
 
     def enqueue(self, namespace: str, session_id: str,
                 messages: Sequence[Message],
@@ -354,6 +362,8 @@ class MemoryService:
         of one per distinct B."""
         if not requests:
             return []
+        tel = get_telemetry()
+        t_exec = time.perf_counter()
         plan = plan or self.plan
         reqs = list(requests)
         res = [self._resolve(r, plan) for r in reqs]
@@ -364,9 +374,10 @@ class MemoryService:
         # slow, possibly remote) embed call stays OUTSIDE the runtime lock
         # so it never stalls the flusher or blocked enqueuers.
         dense_rows = [i for i, rr in enumerate(res) if rr.dense]
-        qvecs = (self.embedder.embed_texts([reqs[i].query
-                                            for i in dense_rows])
-                 if dense_rows else None)
+        with tel.span("plan.embed", batch=len(dense_rows), launches=1):
+            qvecs = (self.embedder.embed_texts([reqs[i].query
+                                                for i in dense_rows])
+                     if dense_rows else None)
         with self._guard():
             if self.runtime is not None:
                 self.runtime.note_activity()
@@ -415,99 +426,117 @@ class MemoryService:
                 q_ns = np.asarray(ns_pad, np.int32)
                 rankings, weight_cols = [], []
                 if dense_rows:
-                    qv = np.asarray(qvecs, np.float32)
-                    qmat = np.zeros((Bp, qv.shape[1]), np.float32)
-                    qmat[dense_rows] = qv
-                    if sharded is not None:
-                        # shard-wise placement: one launch through the
-                        # namespace-masked sharded_topk (local top-k per
-                        # shard, gathered + re-ranked globally); ids come
-                        # back already in global-row space
-                        _, dense_ids = self.store.sharded_search(
-                            qmat, q_ns, k=self.pool)
-                    else:
-                        _, dense_ids = vindex.search_batch(qmat, q_ns,
-                                                           k=self.pool)
-                    if tiers is not None:
-                        # a demoted namespace's rows are absent from the
-                        # device bank: answer those requests from the
-                        # host-mirror masked search (exact, just not
-                        # accelerated) and mark them for promotion — the
-                        # next maintenance tick brings the rows back in
-                        # one batched upload
-                        fb = [i for i in dense_rows
-                              if tenants[i] is not None
-                              and tiers.is_demoted(tenants[i].ns_id)]
-                        if fb:
-                            _, hi = vindex.search_host(
-                                qmat[fb], q_ns[fb], k=self.pool)
-                            dense_ids = np.asarray(dense_ids).copy()
-                            dense_ids[fb] = hi
-                            for i in fb:
-                                tiers.note_host_fallback(tenants[i].ns_id)
-                    dense_ids = self._mask_ranking(
-                        dense_ids,
-                        [r.dense and not d for r, d in zip(res, downed)],
-                        Bp)
+                    with tel.span("plan.dense", batch=Bp, pool=self.pool,
+                                  launches=1,
+                                  sharded=sharded is not None) as sp:
+                        qv = np.asarray(qvecs, np.float32)
+                        qmat = np.zeros((Bp, qv.shape[1]), np.float32)
+                        qmat[dense_rows] = qv
+                        if sharded is not None:
+                            # shard-wise placement: one launch through the
+                            # namespace-masked sharded_topk (local top-k per
+                            # shard, gathered + re-ranked globally); ids come
+                            # back already in global-row space
+                            _, dense_ids = self.store.sharded_search(
+                                qmat, q_ns, k=self.pool)
+                        else:
+                            _, dense_ids = vindex.search_batch(qmat, q_ns,
+                                                               k=self.pool)
+                        if tiers is not None:
+                            # a demoted namespace's rows are absent from the
+                            # device bank: answer those requests from the
+                            # host-mirror masked search (exact, just not
+                            # accelerated) and mark them for promotion — the
+                            # next maintenance tick brings the rows back in
+                            # one batched upload
+                            fb = [i for i in dense_rows
+                                  if tenants[i] is not None
+                                  and tiers.is_demoted(tenants[i].ns_id)]
+                            if fb:
+                                sp.set(host_fallbacks=len(fb))
+                                _, hi = vindex.search_host(
+                                    qmat[fb], q_ns[fb], k=self.pool)
+                                dense_ids = np.asarray(dense_ids).copy()
+                                dense_ids[fb] = hi
+                                for i in fb:
+                                    tiers.note_host_fallback(tenants[i].ns_id)
+                        dense_ids = self._mask_ranking(
+                            dense_ids,
+                            [r.dense and not d for r, d in zip(res, downed)],
+                            Bp)
                     rankings.append(dense_ids)
                     weight_cols.append(
                         [r.dense_weight for r in res]
                         + [self.dense_weight] * (Bp - B))
                 if any(r.sparse for r in res):
-                    _, sparse_ids = self.store.bm25.topk_batch_dev(
-                        [r.query for r in reqs] + [""] * (Bp - B),
-                        k=self.pool, namespaces=ns_pad)
-                    sparse_ids = self._mask_ranking(
-                        sparse_ids,
-                        [r.sparse and not d for r, d in zip(res, downed)],
-                        Bp)
+                    with tel.span("plan.sparse", batch=Bp, pool=self.pool,
+                                  launches=1):
+                        _, sparse_ids = self.store.bm25.topk_batch_dev(
+                            [r.query for r in reqs] + [""] * (Bp - B),
+                            k=self.pool, namespaces=ns_pad)
+                        sparse_ids = self._mask_ranking(
+                            sparse_ids,
+                            [r.sparse and not d for r, d in zip(res, downed)],
+                            Bp)
                     rankings.append(sparse_ids)
                     weight_cols.append(
                         [r.sparse_weight for r in res]
                         + [self.sparse_weight] * (Bp - B))
-                fused_ids, fused_scores = rrf_fuse_batch(
-                    rankings,
-                    weights=np.stack(
-                        [np.asarray(c, np.float32) for c in weight_cols],
-                        axis=1),
-                    k=k_fuse)
-                fused_ids = np.asarray(fused_ids)[:B]
-                fused_scores = np.asarray(fused_scores)[:B]
+                with tel.span("plan.fuse", batch=Bp, k=k_fuse,
+                              rankings=len(rankings), launches=1):
+                    fused_ids, fused_scores = rrf_fuse_batch(
+                        rankings,
+                        weights=np.stack(
+                            [np.asarray(c, np.float32) for c in weight_cols],
+                            axis=1),
+                        k=k_fuse)
+                    fused_ids = np.asarray(fused_ids)[:B]
+                    fused_scores = np.asarray(fused_scores)[:B]
             else:
                 fused_ids = np.full((B, k_fuse), -1, np.int32)
                 fused_scores = np.zeros((B, k_fuse), np.float32)
             # result assembly stays under the guard: the fused global row
             # ids are only valid until the next compaction remaps them
             out: List[Any] = []
-            for r, (rr, t) in enumerate(zip(res, tenants)):
-                # per-request top_k: the fused ranking is sorted best-first,
-                # so its k_r prefix IS the k=k_r fusion of the same inputs
-                ids = fused_ids[r][: rr.k]
-                scs = fused_scores[r][: rr.k]
-                if t is None:
+            with tel.span("plan.budget", batch=B):
+                for r, (rr, t) in enumerate(zip(res, tenants)):
+                    # per-request top_k: the fused ranking is sorted
+                    # best-first, so its k_r prefix IS the k=k_r fusion of
+                    # the same inputs
+                    ids = fused_ids[r][: rr.k]
+                    scs = fused_scores[r][: rr.k]
+                    if t is None:
+                        if rr.budget:
+                            text = MemoriMemory.render([], [])
+                            out.append(RetrievedContext(
+                                [], [], text, self.tokenizer.count(text)))
+                        else:
+                            out.append(RawRetrieval([], [], []))
+                        continue
                     if rr.budget:
-                        text = MemoriMemory.render([], [])
+                        scored = [(t.triples.get(self.store.row_tid(int(g))),
+                                   float(s))
+                                  for g, s in zip(ids, scs) if g >= 0]
+                        ctx = self.budgeter.select(scored, t.summaries)
+                        text = MemoriMemory.render(ctx.triples, ctx.summaries)
                         out.append(RetrievedContext(
-                            [], [], text, self.tokenizer.count(text)))
+                            ctx.triples, ctx.summaries, text,
+                            self.tokenizer.count(text), degraded=downed[r]))
                     else:
-                        out.append(RawRetrieval([], [], []))
-                    continue
-                if rr.budget:
-                    scored = [(t.triples.get(self.store.row_tid(int(g))),
-                               float(s))
-                              for g, s in zip(ids, scs) if g >= 0]
-                    ctx = self.budgeter.select(scored, t.summaries)
-                    text = MemoriMemory.render(ctx.triples, ctx.summaries)
-                    out.append(RetrievedContext(ctx.triples, ctx.summaries,
-                                                text,
-                                                self.tokenizer.count(text),
-                                                degraded=downed[r]))
-                else:
-                    rows = [int(g) for g in ids if g >= 0]
-                    out.append(RawRetrieval(
-                        rows, [self.store.row_tid(g) for g in rows],
-                        [float(s) for g, s in zip(ids, scs) if g >= 0],
-                        degraded=downed[r]))
+                        rows = [int(g) for g in ids if g >= 0]
+                        out.append(RawRetrieval(
+                            rows, [self.store.row_tid(g) for g in rows],
+                            [float(s) for g, s in zip(ids, scs) if g >= 0],
+                            degraded=downed[r]))
+            n_down = sum(downed)
+            if n_down:
+                tel.inc("memori_degraded_responses", n_down,
+                        help="requests answered empty because their "
+                             "placement shard was down")
+                tel.event("degraded_response", count=n_down,
+                          shards=sorted(sharded.down) if sharded else [])
+            tel.observe(RETRIEVE_LATENCY, time.perf_counter() - t_exec,
+                        n=B, help="end-to-end execute() latency per request")
             return out
 
     def _resolve(self, req: RetrieveRequest, plan: RetrievalPlan) -> _Resolved:
@@ -565,12 +594,14 @@ class MemoryService:
         answers normally — the batch never fails wholesale."""
         with self._guard():
             self.store.shard_down(shard)
+        get_telemetry().event("shard_down", shard=int(shard))
 
     def set_shard_up(self, shard: int) -> None:
         """Bring a recovered shard back: restore its device labels from the
         host mirror and stop degrading its tenants' responses."""
         with self._guard():
             self.store.shard_up(shard)
+        get_telemetry().event("shard_up", shard=int(shard))
 
     def attach_follower(self, sink, mode: str = "sync"):
         """Stream every sealed WAL segment to `sink` (a directory path or

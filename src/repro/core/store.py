@@ -39,12 +39,14 @@ away).  See docs/STORAGE.md for the full layout and remapping rules.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 import msgpack
 import numpy as np
 
 from repro.checkpoint import io as ckpt_io
+from repro.obs.telemetry import FLUSH_LATENCY, get_telemetry
 from repro.core.bm25 import BM25Index
 from repro.core.extraction import Extractor, Message, RuleExtractor
 from repro.core.summaries import Summary, SummaryStore
@@ -223,39 +225,48 @@ class MemoryStore:
         the store's own structures."""
         if not self._pending:
             return []
+        tel = get_telemetry()
+        t_flush = time.perf_counter()
         pending, self._pending = self._pending, []
-        try:
-            batch = []                   # (session, triples, summary)
-            for p in pending:
-                triples, summary = self.extractor.extract(
-                    p.conversation_id, p.session_id, p.messages)
-                batch.append((p, triples, summary))
-            if self.sharded is not None:
-                # pin namespace ids in ENQUEUE order before grouping —
-                # replay sees sessions grouped by shard, so the record must
-                # carry the live assignment or recovered ids would drift
-                for p, _, _ in batch:
-                    self._ns_ids.setdefault(p.namespace, len(self._ns_ids))
-                # stable sort: shard-contiguous parts, enqueue order within
-                batch = sorted(
-                    batch, key=lambda b:
-                    self._ns_ids[b[0].namespace] % self.shards)
-            flat = [tr for _, triples, _ in batch for tr in triples]
-            vecs = self.embedder.embed_texts(                # ONE embed call
-                [tr.text() for tr in flat]) if flat else None
-            sessions = [(p.namespace, summary, triples)
-                        for p, triples, summary in batch]
-            if self.wal_sink is not None:    # durability point: WAL first
-                self.wal_sink(self._sharded_flush_record(sessions, vecs)
-                              if self.sharded is not None
-                              else self._flush_record(sessions, vecs))
-        except BaseException:
-            # restore the queue (ahead of anything enqueued concurrently)
-            self._pending = pending + self._pending
-            raise
-        self._apply_flush(sessions, vecs)
-        if self.on_flush_commit is not None:
-            self.on_flush_commit(len(batch))
+        with tel.span("store.flush", sessions=len(pending)):
+            try:
+                batch = []                   # (session, triples, summary)
+                for p in pending:
+                    triples, summary = self.extractor.extract(
+                        p.conversation_id, p.session_id, p.messages)
+                    batch.append((p, triples, summary))
+                if self.sharded is not None:
+                    # pin namespace ids in ENQUEUE order before grouping —
+                    # replay sees sessions grouped by shard, so the record
+                    # must carry the live assignment or recovered ids would
+                    # drift
+                    for p, _, _ in batch:
+                        self._ns_ids.setdefault(p.namespace,
+                                                len(self._ns_ids))
+                    # stable sort: shard-contiguous parts, enqueue order
+                    # within
+                    batch = sorted(
+                        batch, key=lambda b:
+                        self._ns_ids[b[0].namespace] % self.shards)
+                flat = [tr for _, triples, _ in batch for tr in triples]
+                vecs = self.embedder.embed_texts(            # ONE embed call
+                    [tr.text() for tr in flat]) if flat else None
+                sessions = [(p.namespace, summary, triples)
+                            for p, triples, summary in batch]
+                if self.wal_sink is not None:  # durability point: WAL first
+                    self.wal_sink(self._sharded_flush_record(sessions, vecs)
+                                  if self.sharded is not None
+                                  else self._flush_record(sessions, vecs))
+            except BaseException:
+                # restore the queue (ahead of anything enqueued
+                # concurrently)
+                self._pending = pending + self._pending
+                raise
+            self._apply_flush(sessions, vecs)
+            if self.on_flush_commit is not None:
+                self.on_flush_commit(len(batch))
+        tel.observe(FLUSH_LATENCY, time.perf_counter() - t_flush,
+                    help="flush latency (extract + embed + WAL + commit)")
         return [(p.namespace, triples, summary)
                 for p, triples, summary in batch]
 

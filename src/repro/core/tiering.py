@@ -37,6 +37,8 @@ from typing import Callable, Dict, Optional, Set
 
 import numpy as np
 
+from repro.obs.telemetry import get_telemetry
+
 
 @dataclasses.dataclass(frozen=True)
 class TierPolicy:
@@ -149,6 +151,15 @@ class TierManager:
         self.counters["demotions"] += did["demoted_ns"]
         self.counters["promoted_rows"] += did["promoted_rows"]
         self.counters["demoted_rows"] += did["demoted_rows"]
+        tel = get_telemetry()
+        if did["promoted_ns"]:
+            tel.inc("memori_tier_promotions", did["promoted_ns"],
+                    help="namespaces promoted back to the device bank")
+        if did["demoted_ns"]:
+            tel.inc("memori_tier_demotions", did["demoted_ns"],
+                    help="namespaces demoted off the device bank")
+        if did["promoted_ns"] or did["demoted_ns"]:
+            tel.event("tier_tick", **did)
         return did
 
     def _demote_coldest(self, over: int, shielded: Set[int]):

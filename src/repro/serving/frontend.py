@@ -11,11 +11,26 @@ like the SDK clients do).  Four endpoints:
     POST /v1/record     {"session_id", "messages": [{speaker,text,ts}]}
     POST /v1/evict      {"namespace", "superseded_only": false}
     GET  /v1/stats      service + scheduler + admission + frontend counters
-    GET  /v1/metrics    the same counters as Prometheus text exposition —
-                        every numeric leaf of service/scheduler/frontend
-                        stats flattened to a `memori_<path>` gauge (tier
-                        hot/warm rows, promotions/demotions, rescore hit
-                        rate, scheduler launch counters, ...)
+    GET  /v1/metrics    Prometheus text exposition: every numeric leaf of
+                        service/scheduler/frontend stats as a `memori_<path>`
+                        gauge, plus the telemetry registry's latency
+                        histograms and monotonic counters
+                        (obs/telemetry.py), all with `# HELP`/`# TYPE`
+    GET  /v1/healthz    liveness (unauthenticated): 200 while serving
+    GET  /v1/readyz     readiness (unauthenticated): 503 while any
+                        placement shard is down or the lifecycle queue is
+                        in reject-backpressure
+
+**Observability**: every request gets a request id — `X-Request-Id` is
+honored when the client sends one (sanitized), minted otherwise, echoed
+as a response header and as `request_id` in the JSON envelope.  The op
+endpoints open a telemetry `Trace` at the edge; the id rides with the
+request through admission, the scheduler tick and every plan stage, and
+the finished span tree lands in the registry's ring buffer —
+`GET /v1/admin/trace/<request_id>` (admin keyring) fetches it, and
+`"debug": true` on /v1/retrieve returns it inline.  The response envelope
+carries the server-side split (`queued_s` / `service_s` / `batch_size`),
+so remote clients see where the time went, not just wall clock.
 
 **Tenancy** is workspace/api-key shaped (the MemoryLayer SDK surface):
 every request authenticates with `Authorization: Bearer <key>` (or
@@ -57,8 +72,12 @@ from repro.core.api import (CompactRequest, EvictRequest, MemoryResponse,
                             record_request_from_json, response_to_json,
                             retrieve_request_from_json)
 from repro.core.lifecycle import BackpressureError
+from repro.obs.telemetry import get_telemetry, new_request_id
 
 _MAX_BODY = 8 << 20          # one request body; sessions are small
+# client-supplied X-Request-Id values must be log/header-safe; anything
+# else is replaced with a minted id (never rejected — ids are advisory)
+_REQ_ID_RE = re.compile(r"^[A-Za-z0-9._\-]{1,64}$")
 
 
 class _HttpError(Exception):
@@ -107,14 +126,25 @@ def flatten_metrics(stats: Mapping, prefix: str = "memori") -> List[Tuple[str, f
     return out
 
 
-def render_prometheus(samples: List[Tuple[str, float]]) -> str:
+def render_prometheus(samples: List[Tuple[str, float]],
+                      metrics: Tuple = ()) -> str:
+    """Prometheus text exposition: `samples` are point-in-time gauges
+    (flattened stats leaves, each with `# HELP`/`# TYPE`); `metrics` are
+    telemetry registry objects (Counter/Histogram from obs/telemetry.py)
+    rendered through their own `exposition()` — counters get the `_total`
+    suffix and `counter` type, histograms emit cumulative
+    `_bucket`/`_sum`/`_count` series."""
     lines = []
     for name, value in samples:
+        lines.append(f"# HELP {name} point-in-time gauge "
+                     "(stats() leaf)")
         lines.append(f"# TYPE {name} gauge")
         if value == int(value) and abs(value) < 2 ** 53:
             lines.append(f"{name} {int(value)}")
         else:
             lines.append(f"{name} {value}")
+    for m in metrics:
+        lines.extend(m.exposition())
     return "\n".join(lines) + "\n"
 
 
@@ -247,10 +277,15 @@ class MemoryFrontend:
 
     def _send_json(self, handler, code: int, obj: dict,
                    retry_after_s: Optional[float] = None) -> None:
+        rid = getattr(handler, "memori_request_id", None)
+        if rid is not None:
+            obj.setdefault("request_id", rid)
         blob = json.dumps(obj, default=_json_default).encode()
         handler.send_response(code)
         handler.send_header("Content-Type", "application/json")
         handler.send_header("Content-Length", str(len(blob)))
+        if rid is not None:
+            handler.send_header("X-Request-Id", rid)
         if retry_after_s is not None:
             handler.send_header("Retry-After",
                                 str(max(1, math.ceil(retry_after_s))))
@@ -264,13 +299,31 @@ class MemoryFrontend:
 
     def _dispatch(self, handler, method: str) -> None:
         self._count("requests")
+        # honor a sane client X-Request-Id, mint one otherwise; the id is
+        # echoed on every response (header + envelope) and keys the trace
+        rid = handler.headers.get("X-Request-Id", "")
+        if not _REQ_ID_RE.match(rid):
+            rid = new_request_id()
+        handler.memori_request_id = rid
         try:
-            route = (method, handler.path.split("?", 1)[0])
+            path = handler.path.split("?", 1)[0]
+            route = (method, path)
+            if route == ("GET", "/v1/healthz"):
+                # liveness, unauthenticated: answering at all is the signal
+                self._send_json(handler, 200, {"status": "ok"})
+                return
+            if route == ("GET", "/v1/readyz"):
+                self._handle_readyz(handler)
+                return
             if route == ("POST", "/v1/admin/policy"):
                 # admin routes authenticate against their own keyring, so
                 # they match BEFORE tenant auth (a tenant key must 401
                 # here, not fall through to "unknown route")
                 self._handle_admin_policy(handler)
+                return
+            if method == "GET" and path.startswith("/v1/admin/trace/"):
+                self._handle_admin_trace(
+                    handler, path[len("/v1/admin/trace/"):])
                 return
             tenant = self._auth(handler)
             if route == ("POST", "/v1/retrieve"):
@@ -309,14 +362,25 @@ class MemoryFrontend:
             self._send_json(handler, 500, self._error_body(repr(e)))
 
     # -- submission ---------------------------------------------------------
-    def _submit(self, requests: List, tenant: str) -> List:
+    def _submit(self, requests: List, tenant: str, trace=None) -> List:
         """Route typed requests through the mounted scheduler (admission +
         batching) and return futures; without one, run directly and return
-        pre-resolved envelopes."""
+        pre-resolved envelopes.  `trace` (the edge Trace, may be None) gets
+        an `admission` span around the submit and rides with each request
+        so the executing tick records into it."""
+        tel = get_telemetry()
         sched = getattr(self.service, "scheduler", None)
         if sched is not None and sched.can_submit():
-            return sched.submit_many(requests, tenant=tenant)
-        return [self._direct(r) for r in requests]
+            with tel.activate([trace]):
+                with tel.span("admission", tenant=tenant,
+                              requests=len(requests)):
+                    return sched.submit_many(
+                        requests, tenant=tenant,
+                        traces=[trace] * len(requests))
+        # schedulerless: the engine runs on this thread — activate here so
+        # execute()'s plan-stage spans still land in the tree
+        with tel.activate([trace]):
+            return [self._direct(r) for r in requests]
 
     def _direct(self, req) -> "_Resolved":
         t0 = time.monotonic()
@@ -365,8 +429,11 @@ class MemoryFrontend:
                 504, f"request timed out after {self.request_timeout_s}s "
                      "in the scheduler queue")
 
-    def _respond_envelope(self, handler, resp: MemoryResponse) -> None:
+    def _respond_envelope(self, handler, resp: MemoryResponse,
+                          extra: Optional[dict] = None) -> None:
         body = response_to_json(resp)
+        if extra:
+            body.update(extra)
         if resp.ok:
             self._send_json(handler, 200, body)
         elif isinstance(resp.exception, (BackpressureError, AdmissionError)):
@@ -381,44 +448,82 @@ class MemoryFrontend:
 
     # -- endpoints ----------------------------------------------------------
     def _handle_retrieve(self, handler, tenant: str) -> None:
-        body = self._body(handler)
-        queries = body.get("queries")
-        single = queries is None
-        if single:
-            queries = [body]
-        if not isinstance(queries, list) or not queries:
-            raise _HttpError(400, "'queries' must be a non-empty list")
-        default_ns = body.get("namespace")
-        reqs = [retrieve_request_from_json(
-                    q, self._scope(tenant, q.get("namespace", default_ns)))
-                for q in queries]
-        futs = self._submit(reqs, tenant)
-        if body.get("stream"):
-            self._stream_results(handler, futs)
-            return
-        resps = [self._wait(f) for f in futs]
-        if single:
-            self._respond_envelope(handler, resps[0])
-        else:
-            ok = all(r.ok for r in resps)
-            self._send_json(handler, 200 if ok else 207,
-                            {"responses": [response_to_json(r)
-                                           for r in resps]})
+        tel = get_telemetry()
+        trace = tel.start_trace(handler.memori_request_id, op="retrieve")
+        try:
+            with tel.activate([trace]):
+                with tel.span("frontend", tenant=tenant) as sp:
+                    body = self._body(handler)
+                    queries = body.get("queries")
+                    single = queries is None
+                    if single:
+                        queries = [body]
+                    if not isinstance(queries, list) or not queries:
+                        raise _HttpError(400,
+                                         "'queries' must be a non-empty "
+                                         "list")
+                    default_ns = body.get("namespace")
+                    reqs = [retrieve_request_from_json(
+                                q, self._scope(tenant,
+                                               q.get("namespace",
+                                                     default_ns)))
+                            for q in queries]
+                    sp.set(queries=len(reqs))
+            futs = self._submit(reqs, tenant, trace=trace)
+            if body.get("stream"):
+                self._stream_results(handler, futs)
+                return
+            resps = [self._wait(f) for f in futs]
+            # the tick span closed before any future resolved, so the tree
+            # is complete (and no longer being written) by the time it is
+            # finished + serialized here
+            tel.finish_trace(trace)
+            debug = (trace.to_dict() if body.get("debug")
+                     and trace is not None else None)
+            if single:
+                self._respond_envelope(
+                    handler, resps[0],
+                    extra={"trace": debug} if debug else None)
+            else:
+                ok = all(r.ok for r in resps)
+                out = {"responses": [response_to_json(r) for r in resps]}
+                if debug:
+                    out["trace"] = debug
+                self._send_json(handler, 200 if ok else 207, out)
+        finally:
+            # error paths (timeouts, 4xx) still land the partial trace in
+            # the ring buffer; idempotent after the happy path above
+            tel.finish_trace(trace)
 
     def _handle_record(self, handler, tenant: str) -> None:
-        body = self._body(handler)
-        req = record_request_from_json(
-            body, self._scope(tenant, body.get("namespace")))
-        [fut] = self._submit([req], tenant)
-        self._respond_envelope(handler, self._wait(fut))
+        tel = get_telemetry()
+        trace = tel.start_trace(handler.memori_request_id, op="record")
+        try:
+            with tel.activate([trace]):
+                with tel.span("frontend", tenant=tenant):
+                    body = self._body(handler)
+                    req = record_request_from_json(
+                        body, self._scope(tenant, body.get("namespace")))
+            [fut] = self._submit([req], tenant, trace=trace)
+            self._respond_envelope(handler, self._wait(fut))
+        finally:
+            tel.finish_trace(trace)
 
     def _handle_evict(self, handler, tenant: str) -> None:
-        body = self._body(handler)
-        req = EvictRequest(self._scope(tenant, body.get("namespace")),
-                           superseded_only=bool(body.get("superseded_only",
-                                                         False)))
-        [fut] = self._submit([req], tenant)
-        self._respond_envelope(handler, self._wait(fut))
+        tel = get_telemetry()
+        trace = tel.start_trace(handler.memori_request_id, op="evict")
+        try:
+            with tel.activate([trace]):
+                with tel.span("frontend", tenant=tenant):
+                    body = self._body(handler)
+                    req = EvictRequest(
+                        self._scope(tenant, body.get("namespace")),
+                        superseded_only=bool(body.get("superseded_only",
+                                                      False)))
+            [fut] = self._submit([req], tenant, trace=trace)
+            self._respond_envelope(handler, self._wait(fut))
+        finally:
+            tel.finish_trace(trace)
 
     def _handle_admin_policy(self, handler) -> None:
         """POST /v1/admin/policy — swap the scheduler's AdmissionPolicy
@@ -440,6 +545,38 @@ class MemoryFrontend:
                          "operator": operator,
                          "tenants": sorted(policy.tenants)})
 
+    def _handle_readyz(self, handler) -> None:
+        """Readiness (unauthenticated): 503 while the deployment is
+        degraded — any placement shard marked down, or the lifecycle
+        queue rejecting writes under backpressure — so a load balancer
+        stops routing here before clients see degraded answers."""
+        sharded = getattr(self.service.store, "sharded", None)
+        shards_down = (sorted(sharded.down)
+                       if sharded is not None and sharded.down else [])
+        rt = getattr(self.service, "runtime", None)
+        rejecting = bool(rt is not None and rt.rejecting)
+        if shards_down or rejecting:
+            self._send_json(handler, 503, {
+                "status": "unavailable",
+                "shards_down": shards_down,
+                "backpressure_reject": rejecting})
+            return
+        self._send_json(handler, 200, {"status": "ok"})
+
+    def _handle_admin_trace(self, handler, request_id: str) -> None:
+        """GET /v1/admin/trace/<request_id> — fetch a recent finished
+        trace from the telemetry ring buffer (admin keyring)."""
+        operator = self._admin_auth(handler)
+        if not request_id:
+            raise _HttpError(400, "missing request id")
+        tr = get_telemetry().get_trace(request_id)
+        if tr is None:
+            raise _HttpError(404, f"no recent trace for request id "
+                                  f"{request_id!r} (never issued, or "
+                                  "evicted from the ring buffer)")
+        self._send_json(handler, 200, {"status": "ok",
+                                       "operator": operator, "trace": tr})
+
     def _handle_stats(self, handler, tenant: str) -> None:
         st = {"service": self.service.stats(),
               "frontend": dict(self.counters), "tenant": tenant}
@@ -451,7 +588,8 @@ class MemoryFrontend:
     def _handle_metrics(self, handler) -> None:
         """Prometheus text exposition of every numeric counter: service
         stats (bank/tier/lifecycle sections included), scheduler stats
-        when one is mounted, frontend counters."""
+        when one is mounted, frontend counters, and the telemetry
+        registry's latency histograms + monotonic counters."""
         samples = flatten_metrics(self.service.stats(), prefix="memori")
         sched = getattr(self.service, "scheduler", None)
         if sched is not None:
@@ -460,7 +598,8 @@ class MemoryFrontend:
         with self._counter_lock:
             counters = dict(self.counters)
         samples.extend(flatten_metrics(counters, prefix="memori_frontend"))
-        blob = render_prometheus(samples).encode()
+        blob = render_prometheus(
+            samples, metrics=tuple(get_telemetry().metrics())).encode()
         handler.send_response(200)
         handler.send_header("Content-Type",
                             "text/plain; version=0.0.4; charset=utf-8")

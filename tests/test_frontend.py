@@ -253,6 +253,44 @@ def _scrape(fe, key="key-acme"):
         return r.status, r.read().decode(), r.headers
 
 
+def _parse_exposition(text):
+    """Strict parse of a Prometheus text exposition: returns
+    (types, helps, samples) where types/helps are keyed by the declared
+    metric family name and samples by the full sample name (including any
+    `{le="..."}` label)."""
+    types, helps, samples = {}, {}, {}
+    for ln in text.splitlines():
+        if not ln:
+            continue
+        if ln.startswith("# HELP "):
+            name, _, rest = ln[len("# HELP "):].partition(" ")
+            helps[name] = rest
+        elif ln.startswith("# TYPE "):
+            name, _, kind = ln[len("# TYPE "):].partition(" ")
+            assert name not in types, f"duplicate TYPE for {name}"
+            types[name] = kind
+        else:
+            assert not ln.startswith("#"), f"unknown comment line: {ln!r}"
+            name, _, val = ln.partition(" ")
+            float(val)                   # every sample parses as a number
+            assert name not in samples, f"duplicate sample {name}"
+            samples[name] = val
+    return types, helps, samples
+
+
+def _check_histogram_family(name, samples):
+    """Cumulative nondecreasing buckets ending at +Inf == _count, plus a
+    _sum — the exact shape promtool requires."""
+    buckets = [(k, int(v)) for k, v in samples.items()
+               if k.startswith(name + "_bucket{")]
+    assert buckets, f"histogram {name} exported no buckets"
+    counts = [c for _, c in buckets]
+    assert counts == sorted(counts), f"{name} buckets not cumulative"
+    assert buckets[-1][0] == name + '_bucket{le="+Inf"}'
+    assert int(samples[name + "_count"]) == counts[-1]
+    float(samples[name + "_sum"])
+
+
 def test_metrics_prometheus_exposition(frontend):
     _call(frontend, "/v1/record", _record_body())
     _call(frontend, "/v1/retrieve",
@@ -260,17 +298,29 @@ def test_metrics_prometheus_exposition(frontend):
     st, text, headers = _scrape(frontend)
     assert st == 200
     assert headers["Content-Type"].startswith("text/plain")
-    lines = text.splitlines()
-    samples = {}
-    for ln in lines:
-        if ln.startswith("#"):
-            assert ln.startswith("# TYPE memori_") and ln.endswith(" gauge")
-            continue
-        name, val = ln.split(" ")
-        float(val)                       # every sample parses as a number
-        samples[name] = val
-    # one sample line per TYPE line, no duplicates
-    assert len(samples) == sum(1 for ln in lines if ln.startswith("#"))
+    types, helps, samples = _parse_exposition(text)
+    # every family declares a legal type AND a help string
+    for name, kind in types.items():
+        assert name.startswith("memori_")
+        assert kind in ("gauge", "counter", "histogram"), (name, kind)
+        assert helps.get(name), f"{name} has no HELP line"
+        if kind == "gauge":
+            assert name in samples, f"gauge {name} has no sample"
+        elif kind == "counter":
+            # counters carry the _total suffix on the wire, never bare
+            assert name.endswith("_total"), name
+            assert name in samples and name[:-len("_total")] not in samples
+            assert float(samples[name]) >= 0
+        else:
+            _check_histogram_family(name, samples)
+    # every sample line belongs to a declared family
+    for full in samples:
+        base = full.split("{", 1)[0]
+        for suf in ("_bucket", "_sum", "_count"):
+            if base.endswith(suf) and base[:-len(suf)] in types:
+                base = base[:-len(suf)]
+                break
+        assert base in types, f"sample {full} missing TYPE declaration"
     # the layers the dashboard needs are all present
     for want in ("memori_namespaces", "memori_bank_hot_rows",
                  "memori_bank_quant_searches",
@@ -281,6 +331,11 @@ def test_metrics_prometheus_exposition(frontend):
     assert int(samples["memori_frontend_requests"]) >= 2
     # quantization off in this fixture: the knob is still visible as 0
     assert samples["memori_bank_quantized"] == "0"
+    # PR 9: the request-latency histograms ride along on the same scrape
+    for hist in ("memori_retrieve_latency_seconds",
+                 "memori_record_latency_seconds"):
+        assert types.get(hist) == "histogram", f"{hist} not exported"
+        assert int(samples[hist + "_count"]) >= 1
 
 
 def test_metrics_requires_auth(frontend):
@@ -313,3 +368,214 @@ def test_metrics_reports_tier_counters():
     finally:
         fe.close()
         svc.close(final_snapshot=False)
+
+
+# -- PR 9: health, readiness, request ids, traces -----------------------------
+
+def _call_raw(fe, path, body=None, headers=None, method=None):
+    """Like _call but with caller-controlled headers (no implicit auth)."""
+    req = urllib.request.Request(
+        fe.address + path,
+        data=None if body is None else json.dumps(body).encode(),
+        headers=headers or {},
+        method=method or ("GET" if body is None else "POST"))
+    try:
+        with urllib.request.urlopen(req, timeout=30) as r:
+            return r.status, json.loads(r.read().decode()), r.headers
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read().decode()), e.headers
+
+
+def _tree_names(trace):
+    """Flatten a serialized span tree into the set of span names."""
+    out = []
+
+    def walk(sp):
+        out.append(sp["name"])
+        for c in sp.get("children", ()):
+            walk(c)
+    walk(trace["root"])
+    return out
+
+
+def test_healthz_and_readyz_unauthenticated(frontend):
+    st, body, _ = _call_raw(frontend, "/v1/healthz")
+    assert st == 200 and body["status"] == "ok"
+    st, body, _ = _call_raw(frontend, "/v1/readyz")
+    assert st == 200 and body["status"] == "ok"
+
+
+def test_readyz_503_while_shard_down():
+    svc = MemoryService(EMB, use_kernel=False, budget=800, shards=2)
+    fe = MemoryFrontend(svc, KEYS).start()
+    try:
+        st, _, _ = _call_raw(fe, "/v1/readyz")
+        assert st == 200
+        svc.set_shard_down(1)
+        st, body, _ = _call_raw(fe, "/v1/readyz")
+        assert st == 503 and body["status"] == "unavailable"
+        assert body["shards_down"] == [1]
+        svc.set_shard_up(1)
+        st, _, _ = _call_raw(fe, "/v1/readyz")
+        assert st == 200
+    finally:
+        fe.close()
+
+
+def test_readyz_503_under_reject_backpressure():
+    from repro.core.extraction import Message
+    from repro.core.lifecycle import LifecyclePolicy
+    svc = MemoryService(EMB, use_kernel=False, budget=800,
+                        policy=LifecyclePolicy(max_pending=1,
+                                               backpressure="reject"))
+    svc.runtime._stop.set()              # no background flusher interference
+    fe = MemoryFrontend(svc, KEYS).start()
+    try:
+        svc.enqueue("a/c0", "s0",
+                    [Message("U", "I live in Oslo.", 1.0)])
+        st, body, _ = _call_raw(fe, "/v1/readyz")
+        assert st == 503 and body["backpressure_reject"] is True
+        svc.flush()                      # queue drains -> ready again
+        st, _, _ = _call_raw(fe, "/v1/readyz")
+        assert st == 200
+    finally:
+        fe.close()
+        svc.close(final_snapshot=False)
+
+
+def test_request_id_honored_and_minted(frontend):
+    _call(frontend, "/v1/record", _record_body())
+    # caller-supplied X-Request-Id flows into envelope + response header
+    st, env, headers = _call_raw(
+        frontend, "/v1/retrieve",
+        {"namespace": "conv0", "query": "Which city?"},
+        headers={"Authorization": "Bearer key-acme",
+                 "X-Request-Id": "req-abc.123"})
+    assert st == 200
+    assert env["request_id"] == "req-abc.123"
+    assert headers["X-Request-Id"] == "req-abc.123"
+    # absent (or junk) -> the frontend mints one
+    st, env, headers = _call(frontend, "/v1/retrieve",
+                             {"namespace": "conv0", "query": "Which city?"})
+    assert st == 200
+    minted = env["request_id"]
+    assert minted and headers["X-Request-Id"] == minted
+    st, env, _ = _call_raw(
+        frontend, "/v1/retrieve",
+        {"namespace": "conv0", "query": "Which city?"},
+        headers={"Authorization": "Bearer key-acme",
+                 "X-Request-Id": "ill egal;header" + "x" * 80})
+    assert st == 200 and env["request_id"] != ""
+
+
+def test_debug_retrieve_returns_complete_span_tree(frontend):
+    _call(frontend, "/v1/record", _record_body())
+    st, env, _ = _call(frontend, "/v1/retrieve",
+                       {"namespace": "conv0", "query": "Which city?",
+                        "debug": True})
+    assert st == 200
+    trace = env["trace"]
+    assert trace["request_id"] == env["request_id"]
+    assert trace["op"] == "retrieve" and trace["duration_s"] > 0
+    names = _tree_names(trace)
+    # the full path: frontend -> admission -> queue wait -> shared tick ->
+    # every executed plan stage
+    for want in ("frontend", "admission", "queued", "scheduler.tick",
+                 "plan.embed", "plan.dense", "plan.sparse", "plan.fuse",
+                 "plan.budget"):
+        assert want in names, f"span {want} missing from {names}"
+    # without debug the envelope stays lean
+    st, env, _ = _call(frontend, "/v1/retrieve",
+                       {"namespace": "conv0", "query": "Which city?"})
+    assert st == 200 and "trace" not in env
+
+
+def test_admin_trace_endpoint():
+    svc = MemoryService(EMB, use_kernel=False, budget=800)
+    sched = MemoryScheduler(svc, tick_interval_s=0.002, max_batch=16)
+    fe = MemoryFrontend(svc, KEYS,
+                        admin_keys={"admin-key": "ops"}).start()
+    try:
+        _call(fe, "/v1/record", _record_body())
+        st, _, _ = _call_raw(
+            fe, "/v1/retrieve", {"namespace": "conv0", "query": "city?"},
+            headers={"Authorization": "Bearer key-acme",
+                     "X-Request-Id": "trace-me-1"})
+        assert st == 200
+        st, body, _ = _call_raw(
+            fe, "/v1/admin/trace/trace-me-1",
+            headers={"Authorization": "Bearer admin-key"})
+        assert st == 200 and body["operator"] == "ops"
+        tr = body["trace"]
+        assert tr["request_id"] == "trace-me-1"
+        assert "scheduler.tick" in _tree_names(tr)
+        # tenant keys never reach the admin surface
+        st, _, _ = _call_raw(
+            fe, "/v1/admin/trace/trace-me-1",
+            headers={"Authorization": "Bearer key-acme"})
+        assert st == 401
+        # unknown request id -> 404
+        st, _, _ = _call_raw(
+            fe, "/v1/admin/trace/never-issued",
+            headers={"Authorization": "Bearer admin-key"})
+        assert st == 404
+    finally:
+        fe.close()
+        sched.close()
+
+
+def test_admin_trace_404_without_keyring(frontend):
+    st, _, _ = _call_raw(frontend, "/v1/admin/trace/whatever",
+                         headers={"Authorization": "Bearer key-acme"})
+    assert st == 404
+
+
+def test_http_memory_timing_and_traced_retrieve(frontend):
+    mem = HttpMemory(frontend.address, "key-acme", namespace="conv7")
+    mem.record_session("conv7", "s0", [
+        type("M", (), {"speaker": "U", "text": "I live in Turin.",
+                       "timestamp": 1.0})()])
+    t = mem.last_timing
+    assert t["request_id"] and t["service_s"] >= 0 and t["batch_size"] >= 1
+    ctx, trace = mem.retrieve_traced("Which city does the user live in?")
+    assert any("turin" in tr.object for tr in ctx.triples)
+    assert trace["op"] == "retrieve"
+    assert "plan.dense" in _tree_names(trace)
+    assert mem.last_timing["request_id"] == trace["request_id"]
+
+
+def test_metrics_exports_all_latency_histograms(tmp_path):
+    """The PR 9 acceptance scrape: with a durable service mounted, one
+    record + one retrieve over HTTP populate all four latency histograms
+    (retrieve/record/flush/fsync) on /v1/metrics."""
+    from repro.obs.telemetry import Telemetry, get_telemetry, set_telemetry
+    prev = get_telemetry()
+    set_telemetry(Telemetry())
+    svc = MemoryService(EMB, use_kernel=False, budget=800,
+                        data_dir=str(tmp_path / "data"))
+    svc.runtime._stop.set()
+    sched = MemoryScheduler(svc, tick_interval_s=0.002, max_batch=16)
+    fe = MemoryFrontend(svc, KEYS).start()
+    try:
+        st, _, _ = _call(fe, "/v1/record", _record_body())
+        assert st == 200
+        st, _, _ = _call(fe, "/v1/retrieve",
+                         {"namespace": "conv0", "query": "Which city?"})
+        assert st == 200
+        _, text, _ = _scrape(fe)
+        types, _, samples = _parse_exposition(text)
+        for hist in ("memori_retrieve_latency_seconds",
+                     "memori_record_latency_seconds",
+                     "memori_flush_latency_seconds",
+                     "memori_fsync_latency_seconds"):
+            assert types.get(hist) == "histogram", f"{hist} not exported"
+            assert int(samples[hist + "_count"]) >= 1, hist
+            _check_histogram_family(hist, samples)
+        # the write path's counters rode along
+        assert float(samples["memori_wal_appends_total"]) >= 1
+        assert float(samples["memori_wal_fsyncs_total"]) >= 1
+    finally:
+        fe.close()
+        sched.close()
+        svc.close(final_snapshot=False)
+        set_telemetry(prev)

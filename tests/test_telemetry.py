@@ -1,0 +1,273 @@
+"""Telemetry registry (obs/telemetry.py): Prometheus-exact histogram and
+counter exposition, lock-correct concurrent recording checked against a
+numpy oracle, scrape-while-recording consistency, per-request span trees
+propagated frontend -> scheduler -> plan stages, bounded ring buffers for
+traces and structured events (FIFO eviction), slow-query events, the JSONL
+event sink, and the disabled-mode no-op guarantees the overhead bench's
+baseline relies on."""
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import MemoryScheduler, MemoryService
+from repro.core.embedder import HashEmbedder
+from repro.core.api import RetrieveRequest
+from repro.core.extraction import Message
+from repro.obs.telemetry import (DEFAULT_BUCKETS, Counter, Histogram,
+                                 Telemetry, get_telemetry, new_request_id,
+                                 set_telemetry, span_names, walk_spans)
+
+
+@pytest.fixture()
+def tel():
+    """A fresh registry swapped in as the process-wide one (restored on
+    exit so the remaining suite keeps its accumulated metrics)."""
+    prev = get_telemetry()
+    t = set_telemetry(Telemetry(slow_query_s=None))
+    yield t
+    set_telemetry(prev)
+    t.close()
+
+
+# -- histograms: exact Prometheus semantics -----------------------------------
+
+def test_histogram_exposition_exact():
+    h = Histogram("memori_test_seconds", "a test histogram",
+                  buckets=(0.1, 1.0))
+    h.observe(0.05)          # le=0.1
+    h.observe(0.1)           # boundary: buckets are closed above (v <= le)
+    h.observe(0.5, n=3)      # le=1.0, batched
+    h.observe(7.0)           # +Inf only
+    assert h.exposition() == [
+        "# HELP memori_test_seconds a test histogram",
+        "# TYPE memori_test_seconds histogram",
+        'memori_test_seconds_bucket{le="0.1"} 2',
+        'memori_test_seconds_bucket{le="1"} 5',
+        'memori_test_seconds_bucket{le="+Inf"} 6',
+        "memori_test_seconds_sum 8.65",
+        "memori_test_seconds_count 6",
+    ]
+    assert h.count == 6
+
+
+def test_counter_exposition_exact():
+    c = Counter("memori_test_things", "things that happened")
+    c.inc()
+    c.inc(2.5)
+    assert c.exposition() == [
+        "# HELP memori_test_things_total things that happened",
+        "# TYPE memori_test_things_total counter",
+        "memori_test_things_total 3.5",
+    ]
+
+
+def test_histogram_concurrent_observations_match_numpy_oracle():
+    rng = np.random.default_rng(7)
+    per_thread = [rng.gamma(2.0, 0.01, size=2000) for _ in range(8)]
+    h = Histogram("memori_oracle_seconds", buckets=DEFAULT_BUCKETS)
+    threads = [threading.Thread(
+        target=lambda vals=vals: [h.observe(v) for v in vals])
+        for vals in per_thread]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    everything = np.concatenate(per_thread)
+    counts, total = h.snapshot()
+    # oracle: right-closed buckets, exactly Prometheus's v <= le
+    edges = np.array((-np.inf,) + tuple(DEFAULT_BUCKETS) + (np.inf,))
+    want, _ = np.histogram(everything, bins=np.nextafter(edges, np.inf))
+    assert counts.tolist() == want.tolist()
+    assert h.count == everything.size            # no observation lost
+    assert total == pytest.approx(float(everything.sum()), rel=1e-9)
+
+
+def test_scrape_while_recording_stays_consistent():
+    h = Histogram("memori_live_seconds", buckets=(0.001, 0.01, 0.1))
+    stop = threading.Event()
+
+    def recorder():
+        i = 0
+        while not stop.is_set():
+            h.observe(0.0005 * (1 + i % 300))
+            i += 1
+    t = threading.Thread(target=recorder)
+    t.start()
+    try:
+        last_count, last_sum = 0, 0.0
+        for _ in range(300):
+            counts, total = h.snapshot()
+            cum = counts.sum()
+            # cumulative count and sum only move forward, and each
+            # snapshot's (counts, sum) pair is internally consistent
+            assert cum >= last_count
+            assert total >= last_sum - 1e-12
+            assert total <= 0.15 * cum + 1e-9    # max observable value
+            last_count, last_sum = cum, total
+    finally:
+        stop.set()
+        t.join()
+    assert h.count > 0
+
+
+def test_histogram_rejects_empty_buckets():
+    with pytest.raises(ValueError, match="bucket"):
+        Histogram("memori_bad", buckets=())
+
+
+# -- span trees ---------------------------------------------------------------
+
+def test_span_tree_nesting_and_attrs(tel):
+    tr = tel.start_trace("rid-1", op="retrieve")
+    with tel.activate([tr]):
+        with tel.span("outer", tenant="acme"):
+            with tel.span("inner", batch=4) as sp:
+                sp.set(launches=1)
+        tr.add_completed("queued", 0.25)
+    tel.finish_trace(tr)
+    d = tel.get_trace("rid-1")
+    assert span_names(d) == ["retrieve", "outer", "inner", "queued"]
+    spans = {s["name"]: s for s in walk_spans(d["root"])}
+    assert spans["outer"]["attrs"] == {"tenant": "acme"}
+    assert spans["inner"]["attrs"] == {"batch": 4, "launches": 1}
+    assert spans["inner"]["start_s"] >= spans["outer"]["start_s"]
+    assert spans["queued"]["duration_s"] == 0.25
+    assert d["duration_s"] >= spans["outer"]["duration_s"]
+
+
+def test_activate_replaces_and_restores(tel):
+    a = tel.start_trace("a", op="x")
+    b = tel.start_trace("b", op="y")
+    with tel.activate([a, None, a]):                  # dedup + None filter
+        assert tel.current_traces() == [a]
+        with tel.activate([b]):                       # REPLACE, not union
+            with tel.span("only-b"):
+                pass
+        with tel.span("only-a"):
+            pass
+    tel.finish_trace(a)
+    tel.finish_trace(b)
+    assert span_names(tel.get_trace("a")) == ["x", "only-a"]
+    assert span_names(tel.get_trace("b")) == ["y", "only-b"]
+
+
+def test_span_survives_exception_unwind(tel):
+    tr = tel.start_trace("boom", op="r")
+    with pytest.raises(RuntimeError):
+        with tel.activate([tr]):
+            with tel.span("doomed"):
+                raise RuntimeError("kaboom")
+    tel.finish_trace(tr)
+    d = tel.get_trace("boom")
+    spans = {s["name"]: s for s in walk_spans(d["root"])}
+    assert spans["doomed"]["duration_s"] is not None  # closed on unwind
+
+
+def test_full_stack_span_tree_scheduler_to_plan(tel):
+    """The tentpole acceptance path without HTTP: a traced retrieve
+    submitted through the scheduler carries queue wait, the shared tick,
+    and every executed plan stage in ONE tree."""
+    svc = MemoryService(HashEmbedder(), use_kernel=False, budget=800)
+    sched = MemoryScheduler(svc, tick_interval_s=0.002, max_batch=16)
+    try:
+        svc.record("acme/c0", "s0",
+                   [Message("U", "I live in Madrid.", 1.0)])
+        tr = tel.start_trace("full-1", op="retrieve")
+        fut = sched.submit_many(
+            [RetrieveRequest(namespace="acme/c0", query="Which city?")],
+            traces=[tr])[0]
+        assert fut.result(timeout=30).status == "ok"
+        tel.finish_trace(tr)
+        names = span_names(tel.get_trace("full-1"))
+        for want in ("queued", "scheduler.tick", "plan.embed", "plan.dense",
+                     "plan.sparse", "plan.fuse", "plan.budget"):
+            assert want in names, f"{want} missing from {names}"
+        # the tick span closed before the future resolved: every span in
+        # the serialized tree has a duration
+        for s in walk_spans(tel.get_trace("full-1")["root"]):
+            assert s["duration_s"] is not None
+        # the plan stages carry the batch size the launch amortized
+        spans = {s["name"]: s for s in walk_spans(
+            tel.get_trace("full-1")["root"])}
+        assert spans["plan.dense"]["attrs"]["batch"] >= 1
+        assert spans["scheduler.tick"]["attrs"]["batch_size"] >= 1
+    finally:
+        sched.close()
+
+
+# -- ring buffers + events ----------------------------------------------------
+
+def test_trace_ring_evicts_oldest_first():
+    tel = Telemetry(trace_capacity=4, slow_query_s=None)
+    for i in range(6):
+        tel.finish_trace(tel.start_trace(f"r{i}", op="x"))
+    recent = [t["request_id"] for t in tel.recent_traces(limit=10)]
+    assert recent == ["r2", "r3", "r4", "r5"]        # FIFO eviction
+    assert tel.get_trace("r0") is None and tel.get_trace("r1") is None
+    assert tel.get_trace("r5")["request_id"] == "r5"
+
+
+def test_event_ring_evicts_oldest_first_and_filters():
+    tel = Telemetry(event_capacity=3, slow_query_s=None)
+    for i in range(5):
+        tel.event("tick" if i % 2 else "tock", i=i)
+    got = tel.events()
+    assert [e["i"] for e in got] == [2, 3, 4]
+    assert [e["i"] for e in tel.events(kind="tick")] == [3]
+    assert [e["i"] for e in tel.events(limit=1)] == [4]
+
+
+def test_slow_query_event_and_counter():
+    tel = Telemetry(slow_query_s=0.0)
+    tr = tel.start_trace("slowpoke", op="retrieve")
+    tel.finish_trace(tr)
+    tel.finish_trace(tr)                             # idempotent: one event
+    evs = tel.events(kind="slow_query")
+    assert len(evs) == 1 and evs[0]["request_id"] == "slowpoke"
+    assert tel.counter("memori_slow_queries").value == 1
+
+
+def test_jsonl_event_sink(tmp_path):
+    path = str(tmp_path / "events.jsonl")
+    tel = Telemetry(event_sink=path, slow_query_s=None)
+    tel.event("admission_reject", tenants=["acme"], requests=3)
+    tel.event("shard_down", shard=1)
+    tel.close()
+    rows = [json.loads(ln) for ln in
+            open(path, encoding="utf-8").read().splitlines()]
+    assert [r["kind"] for r in rows] == ["admission_reject", "shard_down"]
+    assert rows[0]["tenants"] == ["acme"] and rows[1]["shard"] == 1
+    assert all(r["ts"] > 0 for r in rows)
+
+
+# -- disabled mode + ids ------------------------------------------------------
+
+def test_disabled_telemetry_is_a_no_op():
+    tel = Telemetry(enabled=False)
+    assert tel.start_trace("x", op="y") is None
+    tel.inc("memori_nope")
+    tel.observe("memori_nada", 0.5)
+    with tel.activate([None]):
+        with tel.span("ghost") as sp:
+            sp.set(batch=1)                          # handle still works
+    tel.finish_trace(None)
+    tel.event("invisible")
+    assert tel.metrics() == [] and tel.events() == []
+    assert tel.recent_traces() == [] and tel.render() == ""
+
+
+def test_request_ids_are_unique_hex():
+    ids = {new_request_id() for _ in range(256)}
+    assert len(ids) == 256
+    assert all(len(i) == 16 and int(i, 16) >= 0 for i in ids)
+
+
+def test_registry_reuses_metric_instances():
+    tel = Telemetry()
+    h1 = tel.histogram("memori_same_seconds")
+    h2 = tel.histogram("memori_same_seconds")
+    assert h1 is h2
+    c1 = tel.counter("memori_same_things")
+    assert tel.counter("memori_same_things") is c1
