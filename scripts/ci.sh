@@ -67,6 +67,16 @@ if [[ "${FAST_ONLY:-0}" != "1" ]]; then
     echo "== BENCH_telemetry.json =="
     cat BENCH_telemetry.json
 
+    echo "== bench: graph expansion (k-hop recall uplift vs flat hybrid) =="
+    # asserts the graph-expanded plan's triple-level support recall beats
+    # flat hybrid by >= 0.1 on graph-answerable chains, within a 5x batch
+    # latency budget, with zero recompiles in steady state
+    JAX_PLATFORMS=cpu python benchmarks/graph_bench.py \
+        --assert-uplift 0.1 --assert-latency-factor 5.0 \
+        --json BENCH_graph.json
+    echo "== BENCH_graph.json =="
+    cat BENCH_graph.json
+
     echo "== bench: per-tenant QoS (1 abusive + N well-behaved tenants) =="
     # asserts one flooding tenant degrades well-behaved p99 by < 2x vs the
     # no-abuser baseline (admission control protects the fleet)

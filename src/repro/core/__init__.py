@@ -11,6 +11,7 @@ from repro.core.api import (CompactRequest, EvictRequest,  # noqa: F401
                             RecordRequest, RetrievalPlan, RetrieveRequest)
 from repro.core.augmentation import AdvancedAugmentation  # noqa: F401
 from repro.core.extraction import LMExtractor, Message, RuleExtractor  # noqa: F401
+from repro.core.graph import MemoryGraph  # noqa: F401
 from repro.core.lifecycle import (BackpressureError, LifecyclePolicy,  # noqa: F401
                                   LifecycleRuntime)
 from repro.core.memory import ANSWER_PROMPT, MemoriMemory, RetrievedContext  # noqa: F401

@@ -34,9 +34,15 @@ from repro.core.extraction import Message
 
 STAGE_DENSE = "dense"
 STAGE_SPARSE = "sparse"
+STAGE_GRAPH = "graph"
 STAGE_FUSE = "fuse"
 STAGE_BUDGET = "budget"
-KNOWN_STAGES = (STAGE_DENSE, STAGE_SPARSE, STAGE_FUSE, STAGE_BUDGET)
+KNOWN_STAGES = (STAGE_DENSE, STAGE_SPARSE, STAGE_GRAPH, STAGE_FUSE,
+                STAGE_BUDGET)
+# what a plain RetrievalPlan() runs: graph expansion is opt-in (the
+# graph_expanded variant / per-request stages), so existing flat-retrieval
+# callers keep their exact rankings
+DEFAULT_STAGES = (STAGE_DENSE, STAGE_SPARSE, STAGE_FUSE, STAGE_BUDGET)
 
 
 def _check_stages(stages: Sequence[str]) -> Tuple[str, ...]:
@@ -47,7 +53,9 @@ def _check_stages(stages: Sequence[str]) -> Tuple[str, ...]:
                          f"known: {KNOWN_STAGES}")
     if STAGE_DENSE not in stages and STAGE_SPARSE not in stages:
         raise ValueError("a retrieval plan needs at least one of "
-                         "'dense' / 'sparse'")
+                         "'dense' / 'sparse'"
+                         + (" ('graph' expands their seed rows, it cannot "
+                            "seed itself)" if STAGE_GRAPH in stages else ""))
     # fuse is how rankings become one result — it is always implied, even
     # for a single ranking (the B=1-ranking fuse is what keeps dense-only
     # ordering identical to hybrid ordering restricted to dense hits)
@@ -56,25 +64,61 @@ def _check_stages(stages: Sequence[str]) -> Tuple[str, ...]:
     return stages
 
 
+MAX_HOPS = 8          # the deepest unrolled expansion the service compiles
+
+
+def _check_graph_opts(hops, edge_weights) -> None:
+    if hops is not None and not (1 <= hops <= MAX_HOPS):
+        raise ValueError(f"hops must be in [1, {MAX_HOPS}], got {hops}")
+    if edge_weights is not None:
+        if len(edge_weights) != 3:
+            raise ValueError(
+                "edge_weights must be (entity, temporal, causal) — "
+                f"3 floats, got {len(edge_weights)}")
+        if any(w < 0 for w in edge_weights):
+            raise ValueError("edge_weights must be >= 0")
+
+
 @dataclasses.dataclass(frozen=True)
 class RetrievalPlan:
     """The stage pipeline a retrieve runs, plus its default knobs.
 
-    `stages` ⊆ {dense, sparse, fuse, budget}; at least one of dense/sparse;
-    fuse is implied.  Dropping `budget` returns a `RawRetrieval` (fused
-    global row ids + scores, no token budgeting, no rendering) instead of a
-    `RetrievedContext`.  Every knob here is a *default*: a RetrieveRequest
-    may override any of them per request, and mixed-option requests still
-    share one device launch."""
-    stages: Tuple[str, ...] = KNOWN_STAGES
+    `stages` ⊆ {dense, sparse, graph, fuse, budget}; at least one of
+    dense/sparse; fuse is implied.  Dropping `budget` returns a
+    `RawRetrieval` (fused global row ids + scores, no token budgeting, no
+    rendering) instead of a `RetrievedContext`.  Every knob here is a
+    *default*: a RetrieveRequest may override any of them per request, and
+    mixed-option requests still share one device launch.
+
+    The `graph` stage (docs/API.md) expands the dense/sparse seed rows
+    through the store's entity graph — `hops` k-hop depth, `edge_weights`
+    per edge type (entity, temporal, causal), `graph_weight` the expanded
+    ranking's RRF weight column.  `graph_seed_k` (how many top rows of each
+    upstream ranking seed the frontier) and `graph_decay` (per-hop score
+    decay) are plan-level: they are compiled into the expansion executable,
+    so they cannot vary per request within a batch."""
+    stages: Tuple[str, ...] = DEFAULT_STAGES
     top_k: Optional[int] = None
     dense_weight: Optional[float] = None
     sparse_weight: Optional[float] = None
+    hops: Optional[int] = None                      # default 2
+    edge_weights: Optional[Tuple[float, float, float]] = None
+    graph_weight: Optional[float] = None            # default 0.6
+    graph_seed_k: int = 8
+    graph_decay: float = 0.5
 
     def __post_init__(self):
         object.__setattr__(self, "stages", _check_stages(self.stages))
         if self.top_k is not None and self.top_k < 1:
             raise ValueError("top_k must be >= 1")
+        _check_graph_opts(self.hops, self.edge_weights)
+        if self.graph_seed_k < 1:
+            raise ValueError("graph_seed_k must be >= 1")
+        if not (0.0 < self.graph_decay <= 1.0):
+            raise ValueError("graph_decay must be in (0, 1]")
+        if self.edge_weights is not None:
+            object.__setattr__(self, "edge_weights",
+                               tuple(float(w) for w in self.edge_weights))
 
     # -- variants ----------------------------------------------------------
     @classmethod
@@ -96,6 +140,14 @@ class RetrievalPlan:
         """Hybrid retrieval, fused ids out: no budgeting, no rendering."""
         return cls(stages=(STAGE_DENSE, STAGE_SPARSE, STAGE_FUSE), **kw)
 
+    @classmethod
+    def graph_expanded(cls, budget: bool = True, **kw) -> "RetrievalPlan":
+        """Hybrid + k-hop graph expansion of the seed rows
+        (embed → dense → sparse → graph → fuse [→ budget])."""
+        st = (STAGE_DENSE, STAGE_SPARSE, STAGE_GRAPH, STAGE_FUSE) + \
+            ((STAGE_BUDGET,) if budget else ())
+        return cls(stages=st, **kw)
+
     @property
     def wants_dense(self) -> bool:
         return STAGE_DENSE in self.stages
@@ -103,6 +155,10 @@ class RetrievalPlan:
     @property
     def wants_sparse(self) -> bool:
         return STAGE_SPARSE in self.stages
+
+    @property
+    def wants_graph(self) -> bool:
+        return STAGE_GRAPH in self.stages
 
     @property
     def wants_budget(self) -> bool:
@@ -119,6 +175,12 @@ class RetrieveRequest:
     dense_weight: Optional[float] = None
     sparse_weight: Optional[float] = None
     stages: Optional[Tuple[str, ...]] = None
+    # graph-stage options (only read when the resolved stages include
+    # 'graph'); requests with different hops/edge_weights still share one
+    # expansion launch — hop depth rides in as a traced per-request vector
+    hops: Optional[int] = None
+    edge_weights: Optional[Tuple[float, float, float]] = None
+    graph_weight: Optional[float] = None
 
     def __post_init__(self):
         if not isinstance(self.namespace, str):
@@ -131,6 +193,10 @@ class RetrieveRequest:
             raise ValueError("top_k must be >= 1")
         if self.stages is not None:
             object.__setattr__(self, "stages", _check_stages(self.stages))
+        _check_graph_opts(self.hops, self.edge_weights)
+        if self.edge_weights is not None:
+            object.__setattr__(self, "edge_weights",
+                               tuple(float(w) for w in self.edge_weights))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -237,7 +303,12 @@ def retrieve_request_from_json(obj: dict, namespace: str) -> RetrieveRequest:
                       else float(obj["dense_weight"])),
         sparse_weight=(None if obj.get("sparse_weight") is None
                        else float(obj["sparse_weight"])),
-        stages=None if stages is None else tuple(stages))
+        stages=None if stages is None else tuple(stages),
+        hops=None if obj.get("hops") is None else int(obj["hops"]),
+        edge_weights=(None if obj.get("edge_weights") is None
+                      else tuple(float(w) for w in obj["edge_weights"])),
+        graph_weight=(None if obj.get("graph_weight") is None
+                      else float(obj["graph_weight"])))
 
 
 def record_request_from_json(obj: dict, namespace: str) -> RecordRequest:

@@ -77,6 +77,12 @@ _USED_TO = re.compile(
     r"\bi used to (?:work as|be) (?:a |an )?([\w' -]+?),? but (?:now i(?:'m| am)|i became) (?:a |an )?([\w' -]+?)(?:[.,!]|$| and )",
     re.I)
 
+# third-person allergy: "Muffin is allergic to peanuts" — the one pattern
+# whose subject is the named entity, not the speaker (case-sensitive on the
+# capitalized name so "he is allergic to ..." stays a non-match)
+_THIRD_ALLERGIC = re.compile(
+    r"\b([A-Z][\w'-]+) is allergic to ([\w' -]+?)(?:[.,!]|$| and )")
+
 _NOISE_WORDS = {"it", "that", "this", "them", "those", "there"}
 
 
@@ -109,6 +115,19 @@ class RuleExtractor:
                                 conversation_id=conversation_id,
                                 session_id=session_id, timestamp=msg.timestamp,
                                 source_text=clause.strip()))
+                    continue
+                m = _THIRD_ALLERGIC.search(clause)
+                if m and m.group(1).lower() != "i":
+                    subj = m.group(1)
+                    obj = _clean(m.group(2))
+                    key = (subj.lower(), "is allergic to", obj)
+                    if obj and obj not in _NOISE_WORDS and key not in seen:
+                        seen.add(key)
+                        triples.append(Triple(
+                            subject=subj, predicate="is allergic to",
+                            object=obj, conversation_id=conversation_id,
+                            session_id=session_id, timestamp=msg.timestamp,
+                            source_text=clause.strip()))
                     continue
                 for rx, pred_tpl, obj_g in _P:
                     m = rx.search(clause)

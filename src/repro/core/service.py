@@ -81,8 +81,16 @@ from repro.core.store import MemoryStore
 from repro.core.summaries import Summary
 from repro.core.triples import Triple
 from repro.data.tokenizer import HashTokenizer
-from repro.obs.telemetry import (RECORD_LATENCY, RETRIEVE_LATENCY,
-                                 get_telemetry)
+from repro.obs.telemetry import (GRAPH_EXPAND_LATENCY, RECORD_LATENCY,
+                                 RETRIEVE_LATENCY, get_telemetry)
+
+# graph-stage fallbacks when neither the request nor the plan sets them:
+# 2 hops reaches friend-of-a-fact chains, causal/temporal edges slightly
+# discounted against direct co-occurrence, and the expanded ranking fuses
+# below the dense column's weight (it corroborates, it does not dominate)
+_GRAPH_HOPS = 2
+_GRAPH_EDGE_WEIGHTS = (1.0, 0.9, 0.9)
+_GRAPH_WEIGHT = 0.6
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,7 +101,11 @@ class _Resolved:
     sparse_weight: float
     dense: bool
     sparse: bool
+    graph: bool
     budget: bool
+    hops: int = _GRAPH_HOPS
+    edge_weights: Tuple[float, float, float] = _GRAPH_EDGE_WEIGHTS
+    graph_weight: float = _GRAPH_WEIGHT
 
 
 class MemoryService:
@@ -482,6 +494,51 @@ class MemoryService:
                     weight_cols.append(
                         [r.sparse_weight for r in res]
                         + [self.sparse_weight] * (Bp - B))
+                # graph expansion: the dense/sparse rankings' top rows seed
+                # a batched k-hop walk over the store's entity graph; the
+                # expanded rows join the fusion as a third ranking with
+                # their own weight column.  Requests that skip the stage
+                # (or whose shard is down) get the expanded ranking masked
+                # to -1 — their fusion is bit-identical to a graph-less
+                # batch.  Hop depth is per-request (traced vector); the
+                # unrolled depth compiles at the pow2 bucket of the batch
+                # max, so mixed-hops traffic reuses one executable.
+                graph_wants = [r.graph and not d
+                               for r, d in zip(res, downed)]
+                if any(graph_wants) and rankings:
+                    g = self.store.graph
+                    t_g = time.perf_counter()
+                    hops_list = [rr.hops if w else 0
+                                 for rr, w in zip(res, graph_wants)]
+                    hops_arr = np.zeros((Bp,), np.int32)
+                    hops_arr[:B] = hops_list
+                    tw = np.zeros((Bp, 3), np.float32)
+                    tw[:B] = [rr.edge_weights for rr in res]
+                    max_hops = next_pow2(max(1, max(hops_list)))
+                    with tel.span("plan.graph", batch=Bp, pool=self.pool,
+                                  hops_compiled=max_hops,
+                                  launches=1) as sp:
+                        graph_ids, _, fsz, etc = g.expand(
+                            rankings, q_ns,
+                            self.store.row_namespaces_device(), tw,
+                            hops_arr, k=self.pool, max_hops=max_hops,
+                            seed_k=plan.graph_seed_k,
+                            decay=plan.graph_decay)
+                        graph_ids = self._mask_ranking(
+                            graph_ids, graph_wants, Bp)
+                        sp.set(frontier_sizes=fsz, edges_touched=etc,
+                               nodes=g.n_nodes, edges=g.n_edges)
+                    rankings.append(graph_ids)
+                    weight_cols.append(
+                        [r.graph_weight for r in res] + [0.0] * (Bp - B))
+                    tel.inc("memori_graph_expansions", 1,
+                            help="batched k-hop expansion launches")
+                    tel.inc("memori_graph_requests",
+                            sum(graph_wants),
+                            help="requests whose plan ran the graph stage")
+                    tel.observe(GRAPH_EXPAND_LATENCY,
+                                time.perf_counter() - t_g,
+                                help="graph k-hop expansion stage latency")
                 with tel.span("plan.fuse", batch=Bp, k=k_fuse,
                               rankings=len(rankings), launches=1):
                     fused_ids, fused_scores = rrf_fuse_batch(
@@ -548,11 +605,21 @@ class MemoryService:
         sw = (req.sparse_weight if req.sparse_weight is not None
               else plan.sparse_weight if plan.sparse_weight is not None
               else self.sparse_weight)
+        ew = (req.edge_weights if req.edge_weights is not None
+              else plan.edge_weights if plan.edge_weights is not None
+              else _GRAPH_EDGE_WEIGHTS)
+        gw = (req.graph_weight if req.graph_weight is not None
+              else plan.graph_weight if plan.graph_weight is not None
+              else _GRAPH_WEIGHT)
         return _Resolved(
             k=req.top_k or plan.top_k or self.top_k,
             dense_weight=float(dw), sparse_weight=float(sw),
             dense="dense" in stages, sparse="sparse" in stages,
-            budget="budget" in stages)
+            graph="graph" in stages,
+            budget="budget" in stages,
+            hops=int(req.hops or plan.hops or _GRAPH_HOPS),
+            edge_weights=tuple(float(w) for w in ew),
+            graph_weight=float(gw))
 
     @staticmethod
     def _mask_ranking(ids, wants: List[bool], Bp: int):

@@ -49,12 +49,16 @@ from repro.checkpoint import io as ckpt_io
 from repro.obs.telemetry import FLUSH_LATENCY, get_telemetry
 from repro.core.bm25 import BM25Index
 from repro.core.extraction import Extractor, Message, RuleExtractor
+from repro.core.graph import (EDGE_TYPE_IDS, GraphInvariantError,
+                              MemoryGraph)
 from repro.core.summaries import Summary, SummaryStore
 from repro.core.triples import Triple, TripleStore
 from repro.core.vector_index import VectorIndex
 from repro.data.tokenizer import HashTokenizer, default_tokenizer
 
-SNAPSHOT_VERSION = 1
+# v2 added the memory-graph extents (graph_* arrays + meta["graph"]); v1
+# snapshots predate the graph subsystem and are refused rather than half-read
+SNAPSHOT_VERSION = 2
 
 
 class StoreInvariantError(RuntimeError):
@@ -119,6 +123,11 @@ class MemoryStore:
         else:
             self.sharded = None
         self.bm25 = BM25Index(tokenizer=self.tokenizer)
+        # device-resident entity graph (core/graph.py): interned entity
+        # nodes, typed edges (entity/temporal/causal) and row-incidence
+        # lanes, grown at flush time and remapped through compaction like
+        # every other row table.  The retrieval graph stage expands over it.
+        self.graph = MemoryGraph()
         # hot/warm tier manager (core/tiering.py) — attach_tiers() mounts
         # one; when None every row stays device-resident
         self.tiers = None
@@ -298,6 +307,25 @@ class MemoryStore:
             tid = t.triples.add(tr)
             t.rows.append(int(row))
             self._row_tid.append(tid)
+        # grow the entity graph in step: one ingest per session (temporal
+        # edges follow each session's extraction order), one device sync for
+        # the whole batch.  Replay lands here too — graph state is a
+        # deterministic function of the flush records.
+        cursor = 0
+        try:
+            for ns, _, triples in sessions:
+                if triples:
+                    self.graph.ingest_session(
+                        self.tenant(ns).ns_id, triples,
+                        [int(r) for r in rows[cursor: cursor + len(triples)]])
+                cursor += len(triples)
+        except GraphInvariantError as e:
+            raise StoreInvariantError(str(e)) from e
+        self.graph.sync_device()
+        if self.graph.n_rows != len(self._row_tid):
+            raise StoreInvariantError(
+                f"graph row-incidence lanes ({self.graph.n_rows}) out of "
+                f"sync with the row tables ({len(self._row_tid)})")
         if self.sharded is not None:     # mirror into the shard layout
             self.sharded.append(rows, np.asarray(vecs, np.float32),
                                 [t.ns_id for t in tenants])
@@ -383,6 +411,10 @@ class MemoryStore:
                         f"store already assigned {got}")
             for _shard, part in record["parts"]:
                 self._apply_flush_record(part)
+        elif op == "graph_edge":
+            self._apply_link(record["namespace"], record["subject"],
+                             record["object"], record["etype"],
+                             float(record["weight"]))
         elif op == "evict_ns":
             self.evict_namespace(record["namespace"])
         elif op == "evict_superseded":
@@ -403,6 +435,32 @@ class MemoryStore:
                      conversation_id=conversation_id)
         _, triples, summary = self.flush()[-1]
         return triples, summary
+
+    # -- explicit graph edges ----------------------------------------------
+    def link(self, namespace: str, subject: str, obj: str,
+             etype: str = "entity", weight: float = 1.0) -> None:
+        """Upsert one explicit graph edge between two entities of a tenant
+        (both directions; entities intern through the same normalization as
+        extraction, so linking "Caroline" reaches the node her triples
+        built).  Durable: a `graph_edge` WAL record lands before the apply,
+        and replay goes through the same `_apply_link`."""
+        if etype not in EDGE_TYPE_IDS:
+            raise ValueError(
+                f"unknown edge type {etype!r}; expected one of "
+                f"{sorted(EDGE_TYPE_IDS)}")
+        if self.wal_sink is not None:    # durability point: WAL first
+            self.wal_sink({"op": "graph_edge", "namespace": namespace,
+                           "subject": subject, "object": obj,
+                           "etype": etype, "weight": float(weight)})
+        self._apply_link(namespace, subject, obj, etype, float(weight))
+
+    def _apply_link(self, namespace: str, subject: str, obj: str,
+                    etype: str, weight: float) -> None:
+        ns_id = self.tenant(namespace).ns_id
+        src = self.graph.intern(ns_id, subject)
+        dst = self.graph.intern(ns_id, obj)
+        self.graph.link_nodes(src, dst, EDGE_TYPE_IDS[etype], weight)
+        self.graph.sync_device()
 
     # -- eviction ----------------------------------------------------------
     def evict_namespace(self, namespace: str) -> int:
@@ -463,6 +521,10 @@ class MemoryStore:
         self._row_tid = [tid for tid, k in zip(self._row_tid, keep) if k]
         for t in self._tenants.values():
             t.rows = [int(old_to_new[r]) if r >= 0 else -1 for r in t.rows]
+        try:                             # graph row-incidence moves in step
+            self.graph.compact_rows(old_to_new)
+        except GraphInvariantError as e:
+            raise StoreInvariantError(str(e)) from e
         if self.sharded is not None:     # global row ids moved wholesale
             self.sharded.invalidate()
         return {"rows_before": int(before), "rows_after": int(self.vindex.n),
@@ -496,6 +558,7 @@ class MemoryStore:
                                   for s in t.summaries.all()],
                 } for ns, t in self._tenants.items()
             },
+            "graph": self.graph.snapshot_meta(),
         }
         blob = np.frombuffer(msgpack.packb(meta, use_bin_type=True),
                              np.uint8)
@@ -508,8 +571,13 @@ class MemoryStore:
             "bm25_lens": self.bm25.len_array(),
             "bm25_ns": self.bm25.ns_array(),
             "bm25_alive": self.bm25.alive_array(),
+            **self.graph.snapshot_arrays(),
             "meta": blob,
         }
+        if self.graph.n_rows != n:
+            raise StoreInvariantError(
+                f"snapshot: graph row lanes ({self.graph.n_rows}) out of "
+                f"sync with the bank ({n})")
         if arrays["row_ns"].shape != (n,) or arrays["row_tid"].shape != (n,):
             raise StoreInvariantError(
                 f"snapshot: row tables ({arrays['row_ns'].shape[0]}) out of "
@@ -556,12 +624,18 @@ class MemoryStore:
             t.rows = [int(r) for r in td["rows"]]
             t.evicted = set(int(i) for i in td["evicted"])
             store._tenants[str(ns)] = t
+        try:
+            store.graph = MemoryGraph.from_snapshot(arrays, meta["graph"])
+        except GraphInvariantError as e:
+            raise StoreInvariantError(str(e)) from e
         if len(store._row_tid) != store.vindex.n or \
-                store.vindex.n != len(store.bm25):
+                store.vindex.n != len(store.bm25) or \
+                store.graph.n_rows != store.vindex.n:
             raise StoreInvariantError(
                 f"restore: bank ({store.vindex.n}), BM25 "
-                f"({len(store.bm25)}) and row tables "
-                f"({len(store._row_tid)}) disagree")
+                f"({len(store.bm25)}), row tables "
+                f"({len(store._row_tid)}) and graph lanes "
+                f"({store.graph.n_rows}) disagree")
         return store
 
     # -- sharded retrieval --------------------------------------------------
@@ -629,6 +703,8 @@ class MemoryStore:
                 **self.vindex.counters,
             },
             "per_namespace": per_ns,
+            # flatten_metrics exports these as memori_graph_* gauges
+            "graph": self.graph.stats(),
         }
         if self.tiers is not None:
             out["tiering"] = self.tiers.stats()

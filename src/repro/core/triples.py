@@ -12,6 +12,14 @@ import time
 from typing import Dict, List, Optional
 
 
+def normalize_entity(s: str) -> str:
+    """Canonical form of an entity mention: casefold + whitespace collapse.
+    `Triple.key()` and the memory graph's node interning (core/graph.py)
+    share this function, so "Caroline", "caroline" and "  Caroline " are ONE
+    version chain and ONE graph node instead of silently splitting."""
+    return " ".join(s.split()).lower()
+
+
 @dataclasses.dataclass(frozen=True)
 class Triple:
     subject: str
@@ -32,7 +40,8 @@ class Triple:
         return f"[{ts}] ({self.subject}; {self.predicate}; {self.object})"
 
     def key(self) -> str:
-        return f"{self.subject.lower()}|{self.predicate.lower()}"
+        return f"{normalize_entity(self.subject)}|" \
+               f"{normalize_entity(self.predicate)}"
 
 
 class TripleStore:

@@ -49,6 +49,17 @@ PLACES = ["Iceland", "Morocco", "Patagonia", "Kyoto", "the Azores",
 SKILLS = ["Portuguese", "the cello", "woodworking", "beekeeping",
           "sign language", "calligraphy"]
 
+# vocab for the opt-in graph-chain categories (generate_conversation(...,
+# graph_chains=True)) — deliberately disjoint from FOODS/PLACES/CITIES/
+# HOBBIES/SKILLS so a chain answer can never be reached by lexical overlap
+# with the question's own words
+ALLERGENS = ["peanuts", "strawberries", "shellfish", "gluten", "dairy",
+             "kiwi"]
+TRIPS = ["Banff", "Cappadocia", "Big Sur", "Mount Fuji", "Svalbard",
+         "Zanzibar", "Bariloche", "Hokkaido"]
+ACTIVITIES = ["aikido", "glassblowing", "bouldering", "ceramics", "parkour",
+              "tango"]
+
 NOISE = [
     "How have you been lately?",
     "The weather here has been so strange this week.",
@@ -110,10 +121,19 @@ def _ym(ts: float) -> str:
 
 def generate_conversation(seed: int = 0, n_sessions: int = 12,
                           noise_turns: int = 165,
-                          name_pair=None) -> Conversation:
+                          name_pair=None,
+                          graph_chains: bool = False) -> Conversation:
     """Defaults are sized so a full conversation ≈ 26k tokens — the paper's
     Table-2 full-context figure (26,031 tokens).  `name_pair` pins the two
-    speakers (multi-conversation stores need disjoint speaker names)."""
+    speakers (multi-conversation stores need disjoint speaker names).
+
+    `graph_chains=True` additionally plants facts whose questions are
+    answerable only through the memory graph (GRAPH_CATEGORIES:
+    `multi_hop_graph` ≥2-hop entity chains, `temporal_graph` succession
+    within a session) — the graph-stage scoreboard (benchmarks/
+    graph_bench.py).  Off by default, and the disabled path consumes zero
+    extra randomness, so default conversations are byte-identical to
+    pre-graph ones."""
     rng = random.Random(seed)
     a, b = name_pair if name_pair else rng.sample(NAMES, 2)
     conv_id = f"conv{seed}"
@@ -174,6 +194,26 @@ def generate_conversation(seed: int = 0, n_sessions: int = 12,
         sess_of[f"{sp}:job1"] = s_new
         put(s_new, sp,
             f"I used to work as a {f['job0']}, but now I am a {job1[sp]}.")
+
+    # --- graph-chain facts (opt-in) -----------------------------------------
+    # chain A (entity, 2-hop): pet -> pet_name -> allergen; the question
+    # names the pet species, never the pet's name or the allergen.
+    # chain B (causal, version chain): job0 -> job1 via the "works as"
+    # supersession; the question names only the former job.
+    # chain C (temporal, succession): trip -> activity planted as ONE
+    # message (two clauses), so extraction order — and the temporal edge —
+    # survives the turn shuffle; the question names only the trip.
+    chains: List[Tuple[str, str, str, str]] = []
+    if graph_chains:
+        al2 = rng.sample(ALLERGENS, 2)
+        trip2 = rng.sample(TRIPS, 2)
+        act2 = rng.sample(ACTIVITIES, 2)
+        for sp, al, trip, act in zip((a, b), al2, trip2, act2):
+            chains.append((sp, al, trip, act))
+            put(rng.randrange(n_sessions), sp,
+                f"{facts[sp]['pet_name']} is allergic to {al}.")
+            put(rng.randrange(n_sessions), sp,
+                f"I went to {trip}. I started {act} classes.")
 
     # --- build sessions -------------------------------------------------------
     sessions: List[Tuple[str, List[Message]]] = []
@@ -268,6 +308,20 @@ def generate_conversation(seed: int = 0, n_sessions: int = 12,
             ", ".join(f["hobbies"]),
             [[sp, h] for h in f["hobbies"]], min_supports=2)
 
+    # graph-chain questions: supports name only the chain's FAR end (the
+    # triple the flat retriever has no lexical/semantic bridge to)
+    for sp, al, trip, act in chains:
+        f = facts[sp]
+        add("multi_hop_graph",
+            f"What food can {sp}'s {f['pet']} never eat?", al,
+            [[f["pet_name"], al]])
+        add("multi_hop_graph",
+            f"What is the former {f['job0']}'s current profession?",
+            job1[sp], [[sp, job1[sp]]])
+        add("temporal_graph",
+            f"Which class did {sp} start right after the trip to {trip}?",
+            act, [[sp, act]])
+
     return Conversation(conv_id, (a, b), sessions, qs)
 
 
@@ -317,6 +371,11 @@ def judge(question: Question, answer: str) -> bool:
 
 
 CATEGORIES = ("single_hop", "multi_hop", "temporal", "open_domain")
+
+# the opt-in categories graph_chains=True adds (kept out of CATEGORIES:
+# default conversations, and every consumer weighting by LOCOMO_WEIGHTS,
+# never see them)
+GRAPH_CATEGORIES = ("multi_hop_graph", "temporal_graph")
 
 # LoCoMo question-count weights (paper Table 3, adversarial excluded)
 LOCOMO_WEIGHTS = {"multi_hop": 282, "temporal": 321, "open_domain": 96,

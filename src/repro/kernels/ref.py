@@ -132,3 +132,99 @@ def decode_attention_ref(q, k, v, kv_len, *, scale=None, window: int = 0):
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgt,bktd->bkgd", p, v.astype(jnp.float32))
     return out.astype(q.dtype)
+
+
+def graph_expand_ref(edge_src, edge_dst, edge_type, edge_w, node_ns,
+                     row_sub, row_obj, row_labels, rankings, q_ns, type_w,
+                     hops_b, *, hops: int, k: int, seed_k: int,
+                     decay: float):
+    """Scalar BFS oracle for core/graph._expand_device — the parity
+    contract for the batched k-hop expansion.  Per-request max-product
+    relaxation over the edge list with the SAME float32 operation order as
+    the device kernel:
+
+        we = type_w[b, etype] * edge_w          # f32 * f32
+        c  = F[src] * we
+        c  = c * decay
+        c  = c / out_degree(src)
+
+    combined by max, so accumulation order cannot matter and scores match
+    the device scatter-max bit-exactly.  Inputs are the HOST mirrors (tight
+    or padded — only the first n entries of each lane are read, as passed);
+    `rankings` a sequence of (B, P_i) int arrays (-1-padded best-first),
+    `row_labels` (n_rows_total,) effective labels (-1 = dead), `type_w`
+    (B, 3) f32, `hops_b` (B,) per-request hop counts.  Returns (ids (B, k)
+    i32 -1-padded, scores (B, k) f32) ordered by (-score, row id)."""
+    import numpy as np
+    edge_src = np.asarray(edge_src, np.int32)
+    edge_dst = np.asarray(edge_dst, np.int32)
+    edge_type = np.asarray(edge_type, np.int32)
+    edge_w = np.asarray(edge_w, np.float32)
+    node_ns = np.asarray(node_ns, np.int32)
+    row_sub = np.asarray(row_sub, np.int32)
+    row_obj = np.asarray(row_obj, np.int32)
+    row_labels = np.asarray(row_labels, np.int32)
+    q_ns = np.asarray(q_ns, np.int32)
+    type_w = np.asarray(type_w, np.float32)
+    hops_b = np.asarray(hops_b, np.int32)
+    decay32 = np.float32(decay)
+    B = q_ns.shape[0]
+    n_nodes = node_ns.shape[0]
+    n_rows = row_sub.shape[0]
+    deg = np.bincount(edge_src, minlength=max(1, n_nodes)).astype(np.int64)
+    out_ids = np.full((B, k), -1, np.int32)
+    out_scores = np.zeros((B, k), np.float32)
+    for b in range(B):
+        ns = int(q_ns[b])
+        seeds = {}                                # node -> f32 activation
+        for r in rankings:
+            for row in np.asarray(r[b][:seed_k], np.int64):
+                row = int(row)
+                if row < 0 or row >= n_rows or row >= row_labels.shape[0]:
+                    continue
+                if int(row_labels[row]) != ns:
+                    continue
+                for node in (int(row_sub[row]), int(row_obj[row])):
+                    if node >= 0 and int(node_ns[node]) == ns:
+                        seeds[node] = np.float32(1.0)
+        frontier = dict(seeds)
+        # seed nodes never score rows — neither their hop-0 activation nor
+        # any hop>=1 re-activation (the device kernel masks them the same
+        # way) — `act` holds newly discovered nodes only
+        act = {}
+        for h in range(int(min(hops_b[b], hops))):
+            nxt = {}
+            for e in range(edge_src.shape[0]):
+                s, d = int(edge_src[e]), int(edge_dst[e])
+                f = frontier.get(s)
+                if f is None or int(node_ns[d]) != ns:
+                    continue
+                we = type_w[b, int(edge_type[e])] * edge_w[e]
+                c = f * we
+                c = c * decay32
+                c = c / np.float32(max(int(deg[s]), 1))
+                if c > nxt.get(d, np.float32(0.0)):
+                    nxt[d] = c
+            for node, sc in nxt.items():
+                if sc > act.get(node, np.float32(0.0)):
+                    act[node] = sc
+            frontier = nxt
+            if not frontier:
+                break
+        for node in seeds:
+            act.pop(node, None)
+        scored = []
+        for row in range(n_rows):
+            if row >= row_labels.shape[0] or int(row_labels[row]) != ns:
+                continue
+            sc = np.float32(0.0)
+            for node in (int(row_sub[row]), int(row_obj[row])):
+                if node >= 0:
+                    sc = max(sc, act.get(node, np.float32(0.0)))
+            if sc > 0:
+                scored.append((-sc, row))
+        scored.sort()
+        for i, (negsc, row) in enumerate(scored[:k]):
+            out_ids[b, i] = row
+            out_scores[b, i] = -negsc
+    return out_ids, out_scores

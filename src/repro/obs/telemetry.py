@@ -50,6 +50,7 @@ RETRIEVE_LATENCY = "memori_retrieve_latency_seconds"
 RECORD_LATENCY = "memori_record_latency_seconds"
 FLUSH_LATENCY = "memori_flush_latency_seconds"
 FSYNC_LATENCY = "memori_fsync_latency_seconds"
+GRAPH_EXPAND_LATENCY = "memori_graph_expand_latency_seconds"
 
 # 100us .. 10s: wide enough for a CPU dev box and a production accelerator
 # without reconfiguration; override per-histogram via buckets=
